@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: consistent graph generation, timing, CSV."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+def er_graph(n: int, p: float, seed: int = 0) -> Graph:
+    return Graph.erdos_renyi(n, p, seed=seed)
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    """(result, seconds). Blocks on jax arrays."""
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kwargs)
+        jax.block_until_ready(
+            [x for x in jax.tree.leaves(result) if hasattr(x, "block_until_ready")]
+        ) if jax.tree.leaves(result) else None
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def emit(rows, header=None):
+    """Print rows as `name,us_per_call,derived` CSV (spec format)."""
+    for r in rows:
+        name = r["name"]
+        us = r.get("us_per_call", r.get("runtime_s", 0) * 1e6)
+        derived = r.get("derived", "")
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,65 @@
+"""Kernel microbenchmarks: XLA reference path timings on CPU (the Pallas
+path targets TPU; interpret mode is a correctness tool, not a timing one).
+Derived column reports achieved GFLOP/s or GB/s on this host."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import er_graph, timed
+from repro.kernels import ref
+
+
+def run(n_qubits: int = 16, repeats: int = 3):
+    rows = []
+    g = er_graph(n_qubits, 0.5, seed=0)
+    dim = 2**n_qubits
+
+    cv = jax.jit(lambda e, w: ref.cutvals(n_qubits, e, w))
+    _, t = timed(cv, g.edges, g.weights, repeats=repeats)
+    rows.append({
+        "name": "kernel/cutvals",
+        "runtime_s": t,
+        "derived": f"Melem_per_s={dim * g.n_edges / t / 1e6:.0f}",
+    })
+
+    key = jax.random.PRNGKey(0)
+    re = jax.random.normal(key, (dim,), jnp.float32)
+    im = jnp.zeros((dim,))
+    c = jax.random.uniform(key, (dim,))
+
+    ph = jax.jit(lambda r, i: ref.apply_phase(r, i, c, 0.3))
+    _, t = timed(ph, re, im, repeats=repeats)
+    rows.append({
+        "name": "kernel/phase",
+        "runtime_s": t,
+        "derived": f"GBps={dim * 4 * 5 / t / 1e9:.2f}",
+    })
+
+    mx = jax.jit(lambda r, i: ref.apply_mixer(r, i, n_qubits, 0.7))
+    _, t = timed(mx, re, im, repeats=repeats)
+    flops = 4 * 2 * dim * 128 * (n_qubits / 7)
+    rows.append({
+        "name": "kernel/mixer",
+        "runtime_s": t,
+        "derived": f"GFLOPs={flops / t / 1e9:.2f}",
+    })
+
+    spins = jax.random.rademacher(key, (256, 512), jnp.float32) if hasattr(jax.random, "rademacher") else (jax.random.bernoulli(key, 0.5, (256, 512)).astype(jnp.float32) * 2 - 1)
+    g2 = er_graph(512, 0.2, seed=1)
+    adj = g2.dense_adjacency()
+    cb = jax.jit(lambda s: ref.cut_batch_dense(s, adj, g2.total_weight()))
+    _, t = timed(cb, spins, repeats=repeats)
+    rows.append({
+        "name": "kernel/cutbatch",
+        "runtime_s": t,
+        "derived": f"GFLOPs={2 * 256 * 512 * 512 / t / 1e9:.2f}",
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

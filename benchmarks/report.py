@@ -1,0 +1,141 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json (written by repro.launch.dryrun).
+
+  PYTHONPATH=src:. python -m benchmarks.report            # print tables
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+ARCH_ORDER = [
+    "qwen1_5_0_5b", "gemma3_4b", "internlm2_20b", "gemma3_27b",
+    "internvl2_2b", "moonshot_v1_16b_a3b", "arctic_480b", "whisper_medium",
+    "zamba2_2_7b", "mamba2_1_3b", "paraqaoa",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir=RESULTS):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        r["_pod"] = "multi" if "multipod" in fn else "single"
+        recs.append(r)
+    return recs
+
+
+def _key(r):
+    a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+    s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99
+    return (a, s, r["_pod"])
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | status | compile_s | params/dev | HLO FLOPs/dev | HLO bytes/dev | wire bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=_key):
+        if r.get("status") == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | SKIP (see §4 DESIGN.md) | - | - | - | - | - |"
+            )
+            continue
+        pb = r.get("param_bytes")
+        chips_model = 16
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {status} | {c:.0f} | {pd} | {fl:.2e} | {by:.2e} | {wb} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r.get("mesh", "-"),
+                status=r["status"].upper(), c=r.get("compile_s", 0),
+                pd=_fmt_bytes(pb / chips_model if pb else None),
+                fl=r.get("flops_per_device", 0) or 0,
+                by=r.get("bytes_per_device", 0) or 0,
+                wb=_fmt_bytes(r.get("collective_wire_bytes")),
+            )
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs, pod="single"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | MODEL_FLOPS | useful ratio | roofline fraction |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=_key):
+        if r.get("_pod") != pod:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | SKIP | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | - | - | - |"
+            )
+            continue
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ideal = r["model_flops"] / (r["chips"] * 197e12)
+        frac = ideal / dom if dom > 0 else 0.0
+        lines.append(
+            "| {arch} | {shape} | {c:.4f} | {m:.4f} | {x:.4f} | {b} | {mf:.2e} | {u:.2f} | {f:.1%} |".format(
+                arch=r["arch"], shape=r["shape"], c=r["compute_s"],
+                m=r["memory_s"], x=r["collective_s"], b=r["bottleneck"],
+                mf=r["model_flops"], u=r["useful_ratio"], f=frac,
+            )
+        )
+    return "\n".join(lines)
+
+
+def write_experiments_md(path="EXPERIMENTS.md"):
+    """Substitute the generated tables into EXPERIMENTS.md placeholders."""
+    recs = [r for r in load() if not r.get("tag")]
+    with open(path) as f:
+        text = f.read()
+    text = text.replace(
+        "<!-- DRYRUN_TABLE -->",
+        "### All cells × both meshes\n\n" + dryrun_table(recs),
+    )
+    roof = (
+        "### Single-pod 16×16 (the §Roofline scoreboard)\n\n"
+        + roofline_table(recs, pod="single")
+        + "\n\n### Multi-pod 2×16×16\n\n"
+        + roofline_table(recs, pod="multi")
+    )
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote tables into {path}")
+
+
+def main():
+    import sys
+
+    if "--write" in sys.argv:
+        write_experiments_md()
+        return
+    recs = [r for r in load() if not r.get("tag")]
+    print("## §Dry-run (both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## §Roofline (single-pod 16×16)\n")
+    print(roofline_table(recs, pod="single"))
+    print("\n## §Roofline (multi-pod 2×16×16)\n")
+    print(roofline_table(recs, pod="multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` selects paper-sized
+instances (hours on this CPU container); default sizes finish in minutes
+and preserve every trend the paper reports.
+
+  Table 2  → small_scale      Fig. 9  → k_sweep
+  Table 3  → medium_scale     Fig. 10 → l_sweep
+  Fig. 11  → medium_scale     Fig. 12 → large_scale
+  Figs. 13-14 → pei_eval      (plus kernel microbenches)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks import (
+    k_sweep,
+    kernel_bench,
+    l_sweep,
+    large_scale,
+    medium_scale,
+    pei_eval,
+    small_scale,
+)
+from benchmarks.common import emit
+
+SUITES = {
+    "small_scale": lambda full: small_scale.run(
+        sizes=(14, 16, 18, 20) if full else (14, 16)
+    ),
+    "medium_scale": lambda full: medium_scale.run(
+        sizes=(100, 200, 400) if full else (60, 120)
+    ),
+    "k_sweep": lambda full: k_sweep.run(ks=(1, 2, 3, 4) if full else (1, 2, 4)),
+    "l_sweep": lambda full: l_sweep.run(),
+    "large_scale": lambda full: large_scale.run(
+        sizes=(1000, 2000, 4000, 8000, 16000) if full else (1000, 2000)
+    ),
+    "pei_eval": lambda full: pei_eval.run(),
+    "kernel_bench": lambda full: kernel_bench.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
+    ap.add_argument("--save", default=None, help="write rows to JSON")
+    args = ap.parse_args()
+
+    all_rows = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        rows = fn(args.full)
+        emit(rows)
+        all_rows.extend(rows)
+    if args.save:
+        os.makedirs(os.path.dirname(args.save) or ".", exist_ok=True)
+        with open(args.save, "w") as f:
+            json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

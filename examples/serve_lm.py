@@ -1,0 +1,57 @@
+"""Batched serving example: prefill a batch of prompts, then decode new
+tokens step by step against the KV cache (greedy sampling).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2_1_3b
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models.model import build_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen1_5_0_5b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=16)
+ap.add_argument("--new-tokens", type=int, default=24)
+args = ap.parse_args()
+
+cfg = configs.get_reduced(args.arch)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+prompts = jax.random.randint(
+    jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+)
+batch = {"tokens": prompts}
+if cfg.family == "vlm":
+    batch["patches"] = jax.random.normal(
+        jax.random.PRNGKey(2), (args.batch, cfg.frontend_seq, cfg.d_model)
+    )
+if cfg.family == "audio":
+    batch["frames"] = jax.random.normal(
+        jax.random.PRNGKey(2), (args.batch, cfg.encoder_seq, cfg.d_model)
+    )
+
+extra = cfg.frontend_seq if cfg.family == "vlm" else 0
+s_max = args.prompt_len + extra + args.new_tokens + 1
+logits, state = jax.jit(
+    lambda p, b: model.prefill(p, b, s_max=s_max)
+)(params, batch)
+
+decode = jax.jit(model.decode_step)
+tok = jnp.argmax(logits[:, 0], axis=-1)
+generated = [tok]
+for _ in range(args.new_tokens - 1):
+    logits, state = decode(params, tok, state)
+    tok = jnp.argmax(logits, axis=-1)
+    generated.append(tok)
+
+out = jnp.stack(generated, axis=1)
+print(f"arch={cfg.name} generated {out.shape} tokens:")
+for row in out[:2]:
+    print("  ", row[:16].tolist(), "...")
+print("serving OK")

@@ -1,0 +1,49 @@
+"""End-to-end driver for the paper's headline: a >10,000-vertex Max-Cut
+instance solved by the full ParaQAOA pipeline (partition → batched QAOA
+pool → level-aware merge → refinement), with stage timings.
+
+  PYTHONPATH=src python examples/solve_16k.py            # 16,000 vertices
+  PYTHONPATH=src python examples/solve_16k.py --n 2000   # smaller/faster
+
+The paper solves 16k vertices in 19 min on 2×RTX4090; this container is a
+single CPU core, so default edge probability is reduced (0.01 ≈ 1.3M
+edges). The code path is identical to the pod-scale one — on TPU the same
+pipeline runs through core/distributed.py (solver pool over `data`,
+statevector over `model`).
+"""
+
+import argparse
+import time
+
+from repro.core import ParaQAOAConfig, solve
+from repro.core.baselines import local_search
+from repro.core.graph import Graph
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=16_000)
+ap.add_argument("--p", type=float, default=0.01)
+ap.add_argument("--qubits", type=int, default=10)
+ap.add_argument("--k", type=int, default=1)
+ap.add_argument("--opt-steps", type=int, default=10)
+ap.add_argument("--refine", type=int, default=200)
+args = ap.parse_args()
+
+t0 = time.time()
+print(f"generating G({args.n}, {args.p}) ...", flush=True)
+graph = Graph.erdos_renyi(args.n, args.p, seed=0)
+print(f"  {graph.n_edges} edges ({time.time()-t0:.1f}s)")
+
+cfg = ParaQAOAConfig(
+    n_qubits=args.qubits, top_k=args.k, p_layers=2,
+    opt_steps=args.opt_steps, beam_width=64, refine_steps=args.refine,
+)
+out = solve(graph, cfg)
+print(f"ParaQAOA cut = {out.cut_value:.0f} on {args.n} vertices")
+for stage, t in out.timings.items():
+    print(f"  {stage:12s} {t:.1f}s")
+
+# classical sanity reference at the same scale
+_, ls_cut, ls_rep = local_search(graph, restarts=1, steps=300)
+print(f"local-search reference: {ls_cut:.0f} ({ls_rep.runtime_s:.1f}s)")
+print(f"total weight: {float(graph.total_weight()):.0f} "
+      f"(random-cut expectation = {float(graph.total_weight())/2:.0f})")

@@ -1,0 +1,27 @@
+"""ParaQAOA core: the paper's contribution as composable JAX modules."""
+
+from repro.core.graph import Graph, cut_value, cut_value_batch
+from repro.core.partition import (
+    Partition,
+    connectivity_preserving_partition,
+    partition_for_solver,
+    random_partition,
+)
+from repro.core.paraqaoa import ParaQAOAConfig, ParaQAOAOutput, solve
+from repro.core.pei import approximation_ratio, efficiency_factor, pei
+
+__all__ = [
+    "Graph",
+    "cut_value",
+    "cut_value_batch",
+    "Partition",
+    "connectivity_preserving_partition",
+    "partition_for_solver",
+    "random_partition",
+    "ParaQAOAConfig",
+    "ParaQAOAOutput",
+    "solve",
+    "approximation_ratio",
+    "efficiency_factor",
+    "pei",
+]

@@ -1,0 +1,12 @@
+from repro.core.baselines.brute_force import brute_force_maxcut
+from repro.core.baselines.gw import goemans_williamson
+from repro.core.baselines.local_search import local_search, refine
+from repro.core.baselines.qaoa_in_qaoa import qaoa_in_qaoa
+
+__all__ = [
+    "brute_force_maxcut",
+    "goemans_williamson",
+    "local_search",
+    "refine",
+    "qaoa_in_qaoa",
+]

@@ -1,0 +1,83 @@
+"""Goemans–Williamson baseline via Burer–Monteiro low-rank SDP.
+
+The paper uses GW (0.878-guarantee, interior-point SDP) as the medium-scale
+reference. Interior-point SDP is O(V^3)+ and dies well before 10,000
+vertices, so we solve the SDP relaxation in its Burer–Monteiro low-rank
+factorized form — maximize sum_ij w_ij (1 - <x_i, x_j>)/2 over unit vectors
+x_i in R^r with r = ceil(sqrt(2V)) (above the Barvinok–Pataki rank bound, so
+the factorized problem has no spurious local optima in practice) — with
+projected-gradient ascent in JAX, then classic random-hyperplane rounding.
+This keeps GW-quality cuts available as a reference at every scale the
+paper touches (and is itself a beyond-paper engineering contribution).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, cut_value_batch
+from repro.core.pei import SolveReport
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _bm_optimize(edges, weights, x0, n: int, steps: int, lr: float):
+    """Projected gradient ascent on the low-rank SDP objective."""
+
+    def objective(x):
+        # sum_e w_e (1 - <x_u, x_v>) / 2 ; constants dropped for the gradient
+        dots = jnp.sum(x[edges[:, 0]] * x[edges[:, 1]], axis=-1)
+        return -0.5 * jnp.sum(weights * dots)
+
+    grad = jax.grad(objective)
+
+    def body(x, _):
+        g = grad(x)
+        x = x + lr * g
+        x = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x0, None, length=steps)
+    return x
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _round_hyperplanes(x, key, rounds: int):
+    r = x.shape[-1]
+    h = jax.random.normal(key, (rounds, r), dtype=x.dtype)
+    signs = (x @ h.T) >= 0.0  # (V, rounds)
+    return signs.T.astype(jnp.int8)  # (rounds, V)
+
+
+def goemans_williamson(
+    graph: Graph,
+    steps: int = 300,
+    rounds: int = 64,
+    lr: float = 0.05,
+    seed: int = 0,
+    rank: int | None = None,
+):
+    """Returns (assignment, cut value, SolveReport)."""
+    t0 = time.perf_counter()
+    n = graph.n
+    r = rank or max(4, int(np.ceil(np.sqrt(2.0 * n))))
+    key = jax.random.PRNGKey(seed)
+    k0, k1 = jax.random.split(key)
+    x0 = jax.random.normal(k0, (n, r), dtype=jnp.float32)
+    x0 = x0 / jnp.linalg.norm(x0, axis=-1, keepdims=True)
+
+    x = _bm_optimize(graph.edges, graph.weights, x0, n, steps, lr)
+    assigns = _round_hyperplanes(x, k1, rounds)
+    cuts = cut_value_batch(graph, assigns)
+    best = int(jnp.argmax(cuts))
+    val = float(cuts[best])
+    t1 = time.perf_counter()
+    report = SolveReport(
+        method="gw", n_vertices=n, cut_value=val, runtime_s=t1 - t0,
+        extra={"rank": r, "steps": steps, "rounds": rounds},
+    )
+    return np.asarray(assigns[best]), val, report

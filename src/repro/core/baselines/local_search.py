@@ -1,0 +1,84 @@
+"""Vectorized 1-flip local search.
+
+Used two ways:
+  - as a classical baseline (`local_search`, random restarts),
+  - as the beyond-paper refinement pass on ParaQAOA's merged assignment
+    (`refine`) — a few sweeps of best-improvement flips recover most of the
+    AR lost to dropped inter-partition edges at negligible cost.
+
+The flip gain for vertex v is  g(v) = deg_w(v) - 2 * cut_incident(v),
+computed for all vertices at once from the edge list (no dense matrix), so
+one sweep is O(|E|) and fully vectorized.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, cut_value
+from repro.core.pei import SolveReport
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _sweeps(edges, weights, assignment, steps: int, n: int):
+    def gains(s):
+        su = s[edges[:, 0]]
+        sv = s[edges[:, 1]]
+        crossed = (su ^ sv).astype(weights.dtype)
+        # incident cut weight and degree per vertex
+        inc = jnp.zeros((n,), weights.dtype)
+        inc = inc.at[edges[:, 0]].add(weights * crossed)
+        inc = inc.at[edges[:, 1]].add(weights * crossed)
+        deg = jnp.zeros((n,), weights.dtype)
+        deg = deg.at[edges[:, 0]].add(weights)
+        deg = deg.at[edges[:, 1]].add(weights)
+        return deg - 2.0 * inc  # gain of flipping each vertex alone
+
+    def body(carry, _):
+        s, cut = carry
+        g = gains(s)
+        v = jnp.argmax(g)
+        improve = g[v] > 1e-6
+        s = jnp.where(
+            jnp.arange(n) == v, jnp.where(improve, 1 - s[v], s[v]), s
+        ).astype(s.dtype)
+        cut = cut + jnp.where(improve, g[v], 0.0)
+        return (s, cut), None
+
+    su = assignment[edges[:, 0]]
+    sv = assignment[edges[:, 1]]
+    cut0 = jnp.sum(weights * (su ^ sv).astype(weights.dtype))
+    (s, cut), _ = jax.lax.scan(body, (assignment, cut0), None, length=steps)
+    return s, cut
+
+
+def refine(graph: Graph, assignment: np.ndarray, steps: int):
+    """Best-improvement 1-flip refinement of an existing assignment."""
+    s = jnp.asarray(assignment, dtype=jnp.int32)
+    s, cut = _sweeps(graph.edges, graph.weights, s, steps, graph.n)
+    return np.asarray(s, dtype=np.int8), float(cut)
+
+
+def local_search(graph: Graph, restarts: int = 8, steps: int = 200, seed: int = 0):
+    """Random-restart 1-flip local search baseline."""
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    best_s, best_v = None, -1.0
+    for _ in range(restarts):
+        s0 = rng.integers(0, 2, size=graph.n).astype(np.int32)
+        s, v = _sweeps(graph.edges, graph.weights, jnp.asarray(s0), steps, graph.n)
+        if float(v) > best_v:
+            best_v, best_s = float(v), np.asarray(s, dtype=np.int8)
+    t1 = time.perf_counter()
+    report = SolveReport(
+        method="local_search",
+        n_vertices=graph.n,
+        cut_value=best_v,
+        runtime_s=t1 - t0,
+    )
+    return best_s, best_v, report

@@ -1,0 +1,240 @@
+"""Distributed execution of ParaQAOA on a device mesh.
+
+Three shard_map programs, matching DESIGN.md §2:
+
+1. `solve_pool`       — solver-pool data parallelism: the vmapped subgraph
+   batch is sharded across the `data` (and `pod`) axes. This is the paper's
+   "N_s QAOA solvers × T rounds" recast as SPMD.
+
+2. `sharded_qaoa`     — statevector tensor parallelism: one subproblem's
+   2^n amplitudes sharded across the `model` axis. The transverse-field
+   mixer factorizes per qubit, so only the log2(axis_size) "global" qubits
+   need cross-device mixing; one qubit-swap `all_to_all` rotates them into
+   locality. Lifts the paper's 26-qubit/GPU cap to 26 + log2(model) qubits.
+
+   Two collective schedules:
+     - "faithful":    swap in + swap back every layer (2 a2a/layer) — the
+       direct port of a distributed gate-level simulator.
+     - "alternating": keep the swapped layout between layers and evaluate
+       the diagonal cost layer with *relabelled* cut values (1 a2a/layer —
+       a diagonal Hamiltonian makes the layout change a pure relabelling).
+       Beyond-paper optimization; see EXPERIMENTS.md §Perf.
+
+3. `merge_sharded`    — the merge frontier striped across `data` at the
+   paper's starting level L: each shard prunes its own stripe locally (the
+   paper's independent DFS workers); a pmax/pmin picks the global winner.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.core import merge as merge_mod
+from repro.core import qaoa as qaoa_mod
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# 1. solver-pool data parallelism
+# ---------------------------------------------------------------------------
+def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
+               axes=("data",)):
+    """Batched QAOA across the mesh: round-robin subgraphs over devices.
+
+    Pads the batch to a multiple of the axis size (padding entries are
+    empty graphs) and strips the padding on return.
+    """
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    m = edges.shape[0]
+    m_pad = ((m + total - 1) // total) * total
+    if m_pad != m:
+        pad = m_pad - m
+        edges = jnp.concatenate(
+            [edges, jnp.zeros((pad,) + edges.shape[1:], edges.dtype)]
+        )
+        weights = jnp.concatenate(
+            [weights, jnp.zeros((pad,) + weights.shape[1:], weights.dtype)]
+        )
+        masks = jnp.concatenate([masks, jnp.ones((pad,), masks.dtype)])
+
+    spec = P(axes)
+
+    def run(e, w, mk):
+        return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
+
+    sharded = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=qaoa_mod.QAOAResult(spec, spec, spec, spec, spec),
+        check_vma=False,
+    )
+    res = jax.jit(sharded)(edges, weights, masks)
+    return jax.tree.map(lambda x: x[:m], res)
+
+
+# ---------------------------------------------------------------------------
+# 2. sharded-statevector QAOA (statevector tensor parallelism)
+# ---------------------------------------------------------------------------
+class ShardedQAOAResult(NamedTuple):
+    bitstrings: jnp.ndarray  # (K,) int32 global basis indices (replicated)
+    probs: jnp.ndarray  # (K,)
+    expectation: jnp.ndarray  # scalar
+
+
+def _mix_bits(re, im, n_local: int, lo_bit: int, nbits: int, beta):
+    """Mix qubits [lo_bit, lo_bit+nbits) of a flat 2^n_local local state."""
+    x = 2 ** (n_local - lo_bit - nbits)
+    y = 2**lo_bit
+    C, D = ref.rx_kron_parts(beta, nbits)
+    re3 = re.reshape(x, 2**nbits, y)
+    im3 = im.reshape(x, 2**nbits, y)
+    re_new = jnp.einsum("ab,xby->xay", C, re3) - jnp.einsum("ab,xby->xay", D, im3)
+    im_new = jnp.einsum("ab,xby->xay", C, im3) + jnp.einsum("ab,xby->xay", D, re3)
+    return re_new.reshape(-1), im_new.reshape(-1)
+
+
+def sharded_qaoa(
+    edges,
+    weights,
+    n: int,
+    gammas,
+    betas,
+    mesh: Mesh,
+    axis: str = "model",
+    top_k: int = 4,
+    schedule: str = "alternating",
+    group: int = 7,
+):
+    """One n-qubit QAOA circuit with amplitudes sharded over `axis`.
+
+    Layouts: A (row-sharded: device d owns global indices [d·L, (d+1)·L));
+    B (after the qubit-swap all_to_all: device p owns, for every d, the
+    slice [d·L + p·chunk, d·L + (p+1)·chunk)). In layout B the local flat
+    index's high h bits are the *original* high qubits — so a full local
+    mixer still touches each original qubit exactly once per layer.
+    """
+    d_ax = mesh.shape[axis]
+    h = int(np.log2(d_ax))
+    assert 2**h == d_ax, f"axis size {d_ax} must be a power of two"
+    n_local = n - h
+    L = 2**n_local
+    chunk = L // d_ax
+    assert chunk >= 1, f"statevector too small for the mesh: n={n}, axis={d_ax}"
+    log2_chunk = int(np.log2(chunk))
+    p_layers = int(gammas.shape[0])
+
+    def local_run(edges, weights, gammas, betas):
+        me = jax.lax.axis_index(axis)
+        idx_a = me * L + jnp.arange(L, dtype=jnp.int32)
+        q = jnp.arange(L, dtype=jnp.int32)
+        idx_b = (q // chunk) * L + me * chunk + (q % chunk)
+        cutv_a = ref.cutvals_at(idx_a, edges, weights)
+        cutv_b = ref.cutvals_at(idx_b, edges, weights)
+
+        re = jnp.full((L,), 2.0 ** (-n / 2), dtype=jnp.float32)
+        im = jnp.zeros((L,), dtype=jnp.float32)
+
+        def a2a(x):
+            return jax.lax.all_to_all(
+                x.reshape(d_ax, chunk), axis, split_axis=0, concat_axis=0
+            ).reshape(-1)
+
+        in_b = False
+        for l in range(p_layers):  # p is small; unrolled keeps parity static
+            g, b = gammas[l], betas[l]
+            cutv = cutv_b if in_b else cutv_a
+            re, im = ref.apply_phase(re, im, cutv, g)
+            # mix the n-h locally-resident qubits
+            re, im = ops.apply_mixer(re, im, n_local, b, group=group)
+            # rotate the h shard-axis qubits into locality and mix them:
+            # after the swap they sit at local bits [log2_chunk, log2_chunk+h)
+            re, im = a2a(re), a2a(im)
+            re, im = _mix_bits(re, im, n_local, log2_chunk, h, b)
+            if schedule == "alternating":
+                in_b = not in_b
+            else:  # faithful: swap straight back to layout A
+                re, im = a2a(re), a2a(im)
+
+        cutv = cutv_b if in_b else cutv_a
+        idx = idx_b if in_b else idx_a
+        exp = jax.lax.psum(ref.expectation(re, im, cutv), axis)
+        probs = re * re + im * im
+        v, i_loc = jax.lax.top_k(probs, top_k)
+        all_v = jax.lax.all_gather(v, axis).reshape(-1)
+        all_i = jax.lax.all_gather(idx[i_loc], axis).reshape(-1)
+        vv, ii = jax.lax.top_k(all_v, top_k)
+        return ShardedQAOAResult(all_i[ii], vv, exp)
+
+    run = shard_map(
+        local_run,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P()),
+        out_specs=ShardedQAOAResult(P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(run)(edges, weights, gammas, betas)
+
+
+# ---------------------------------------------------------------------------
+# 3. sharded merge frontier (level-aware workers)
+# ---------------------------------------------------------------------------
+def merge_sharded(
+    plan: merge_mod.MergePlan,
+    beam_width: int,
+    mesh: Mesh,
+    axis: str = "data",
+    split_level: int = 1,
+):
+    """Level-aware merge: frontier striped across `axis` at `split_level`.
+
+    Each shard sweeps its own beam of beam_width rows — the global frontier
+    is n_shards × beam_width (the paper's "2K^L workers ⇒ runtime halves
+    per doubling" regime). Returns (assignment (V,), cut value), replicated.
+    """
+    d_ax = mesh.shape[axis]
+
+    def local_run(lo, cand_bits, edge_u, edge_v, edge_w):
+        me = jax.lax.axis_index(axis)
+        local_plan = merge_mod.MergePlan(
+            n_vert=plan.n_vert,
+            n_pad=plan.n_pad,
+            n_max=plan.n_max,
+            k=plan.k,
+            lo=lo,
+            cand_bits=cand_bits,
+            edge_u=edge_u,
+            edge_v=edge_v,
+            edge_w=edge_w,
+        )
+        res = merge_mod.merge_scan(
+            local_plan,
+            beam_width,
+            shard_id=me,
+            n_shards=d_ax,
+            split_level=split_level,
+        )
+        best = jax.lax.pmax(res.cut_value, axis)
+        rank = jnp.where(res.cut_value >= best, me, jnp.int32(2**30))
+        winner = jax.lax.pmin(rank, axis)
+        mask = (me == winner).astype(res.assignment.dtype)
+        assign = jax.lax.psum(res.assignment * mask, axis)
+        return assign, best
+
+    run = shard_map(
+        local_run,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(run)(
+        plan.lo, plan.cand_bits, plan.edge_u, plan.edge_v, plan.edge_w
+    )

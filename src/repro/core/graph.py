@@ -1,0 +1,138 @@
+"""Graph representation for Max-Cut instances.
+
+Graphs are stored as padded edge lists so every downstream JAX computation
+is shape-stable: ``edges`` is ``(E_pad, 2) int32``, ``weights`` is
+``(E_pad,) float32`` with zero weight on padding rows. Padding rows point at
+vertex 0 on both endpoints, which contributes nothing to any cut because the
+XOR of identical endpoints is zero *and* the weight is zero — both guards
+hold so either representation change stays safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A padded, undirected, weighted graph.
+
+    Attributes:
+      n: number of vertices (static).
+      edges: (E_pad, 2) int32 vertex indices, padding rows are (0, 0).
+      weights: (E_pad,) float32, zero on padding rows.
+      n_edges: true (unpadded) edge count, static python int.
+    """
+
+    n: int
+    edges: jnp.ndarray
+    weights: jnp.ndarray
+    n_edges: int
+
+    # -- pytree plumbing (n / n_edges are static aux data) ------------------
+    def tree_flatten(self):
+        return (self.edges, self.weights), (self.n, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        edges, weights = children
+        n, n_edges = aux
+        return cls(n=n, edges=edges, weights=weights, n_edges=n_edges)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_edges(
+        cls,
+        n: int,
+        edge_list: Iterable[tuple[int, int]],
+        weights: Sequence[float] | None = None,
+        pad_to: int | None = None,
+    ) -> "Graph":
+        edge_arr = np.asarray(list(edge_list), dtype=np.int32).reshape(-1, 2)
+        m = edge_arr.shape[0]
+        w = (
+            np.ones((m,), dtype=np.float32)
+            if weights is None
+            else np.asarray(weights, dtype=np.float32)
+        )
+        if pad_to is None:
+            pad_to = m
+        if pad_to < m:
+            raise ValueError(f"pad_to={pad_to} < n_edges={m}")
+        ep = np.zeros((pad_to, 2), dtype=np.int32)
+        wp = np.zeros((pad_to,), dtype=np.float32)
+        ep[:m] = edge_arr
+        wp[:m] = w
+        return cls(n=n, edges=jnp.asarray(ep), weights=jnp.asarray(wp), n_edges=m)
+
+    @classmethod
+    def erdos_renyi(cls, n: int, p: float, seed: int, pad_to: int | None = None) -> "Graph":
+        """Erdős–Rényi G(n, p), matching the paper's instance generator."""
+        rng = np.random.default_rng(seed)
+        iu, ju = np.triu_indices(n, k=1)
+        mask = rng.random(iu.shape[0]) < p
+        edge_arr = np.stack([iu[mask], ju[mask]], axis=1).astype(np.int32)
+        g = cls.from_edges(n, edge_arr, pad_to=pad_to)
+        return g
+
+    # -- basic quantities ----------------------------------------------------
+    def total_weight(self) -> jnp.ndarray:
+        return jnp.sum(self.weights)
+
+    def dense_adjacency(self) -> jnp.ndarray:
+        """(n, n) float32 symmetric adjacency. Only for small graphs."""
+        a = jnp.zeros((self.n, self.n), dtype=jnp.float32)
+        i, j = self.edges[:, 0], self.edges[:, 1]
+        a = a.at[i, j].add(self.weights)
+        a = a.at[j, i].add(self.weights)
+        # padding rows add weight 0 at (0, 0): harmless.
+        return a
+
+    def degree(self) -> jnp.ndarray:
+        d = jnp.zeros((self.n,), dtype=jnp.float32)
+        d = d.at[self.edges[:, 0]].add(self.weights)
+        d = d.at[self.edges[:, 1]].add(self.weights)
+        return d
+
+
+def cut_value(graph: Graph, assignment: jnp.ndarray) -> jnp.ndarray:
+    """Cut value of one 0/1 assignment vector of shape (n,)."""
+    s = assignment.astype(jnp.int32)
+    crossed = s[graph.edges[:, 0]] ^ s[graph.edges[:, 1]]
+    return jnp.sum(graph.weights * crossed.astype(graph.weights.dtype))
+
+
+def cut_value_batch(graph: Graph, assignments: jnp.ndarray) -> jnp.ndarray:
+    """Cut values for a batch of 0/1 assignments, shape (B, n) → (B,)."""
+    s = assignments.astype(jnp.int32)
+    crossed = s[:, graph.edges[:, 0]] ^ s[:, graph.edges[:, 1]]
+    return crossed.astype(graph.weights.dtype) @ graph.weights
+
+
+def subgraph(graph: Graph, lo: int, hi: int, pad_to: int | None = None) -> Graph:
+    """Induced subgraph on the contiguous vertex range [lo, hi).
+
+    Host-side (numpy) — partitioning is preprocessing, as in the paper.
+    Vertices are relabelled to [0, hi-lo).
+    """
+    e = np.asarray(graph.edges)[: graph.n_edges]
+    w = np.asarray(graph.weights)[: graph.n_edges]
+    m = (e[:, 0] >= lo) & (e[:, 0] < hi) & (e[:, 1] >= lo) & (e[:, 1] < hi)
+    sub_e = e[m] - lo
+    return Graph.from_edges(hi - lo, sub_e, w[m], pad_to=pad_to)
+
+
+def networkx_to_graph(nx_graph, pad_to: int | None = None) -> Graph:
+    """Convert a networkx graph (integer-labelled 0..n-1) to a Graph."""
+    n = nx_graph.number_of_nodes()
+    edges, weights = [], []
+    for u, v, data in nx_graph.edges(data=True):
+        edges.append((u, v))
+        weights.append(float(data.get("weight", 1.0)))
+    return Graph.from_edges(n, edges, weights, pad_to=pad_to)

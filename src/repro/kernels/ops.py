@@ -1,0 +1,89 @@
+"""Dispatch layer: every hot op has a Pallas TPU kernel and a pure-jnp path.
+
+``implementation``:
+  - "auto":   Pallas on TPU, XLA (jnp reference) elsewhere.
+  - "xla":    always the jnp reference path (fast on CPU).
+  - "pallas": compiled Pallas kernels (TPU).
+  - "pallas_interpret": Pallas kernels in interpret mode (CPU correctness
+    validation; slow — used by tests).
+
+The jnp reference path *is* `kernels.ref` — there is exactly one source of
+truth for each op's semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_IMPL = "auto"
+
+
+def set_implementation(impl: str) -> None:
+    global _IMPL
+    assert impl in ("auto", "xla", "pallas", "pallas_interpret"), impl
+    _IMPL = impl
+
+
+def get_implementation() -> str:
+    if _IMPL != "auto":
+        return _IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pallas(interpret_ok: bool = True):
+    impl = get_implementation()
+    if impl == "pallas":
+        return dict(use=True, interpret=False)
+    if impl == "pallas_interpret":
+        return dict(use=True, interpret=True)
+    return dict(use=False, interpret=False)
+
+
+def cutvals(n: int, edges, weights):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import cutvals as k
+
+        return k.cutvals(n, edges, weights, interpret=p["interpret"])
+    return ref.cutvals(n, edges, weights)
+
+
+def apply_phase(re, im, cutv, gamma):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import phase as k
+
+        return k.apply_phase(re, im, cutv, gamma, interpret=p["interpret"])
+    return ref.apply_phase(re, im, cutv, gamma)
+
+
+def apply_mixer(re, im, n: int, beta, group: int = 7):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import mixer as k
+
+        return k.apply_mixer(re, im, n, beta, group=group, interpret=p["interpret"])
+    return ref.apply_mixer(re, im, n, beta, group=group)
+
+
+def expectation(re, im, cutv):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import phase as k
+
+        return k.expectation(re, im, cutv, interpret=p["interpret"])
+    return ref.expectation(re, im, cutv)
+
+
+def cut_batch_dense(spins, adjacency, total_weight):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import cutbatch as k
+
+        return k.cut_batch_dense(spins, adjacency, total_weight, interpret=p["interpret"])
+    return ref.cut_batch_dense(spins, adjacency, total_weight)

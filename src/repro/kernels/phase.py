@@ -1,0 +1,89 @@
+"""Pallas TPU kernels for the diagonal cost layer.
+
+`apply_phase`: psi ← e^{-iγc}·psi on (re, im) planes — pure VPU elementwise,
+tiled so each block streams HBM→VMEM once (memory-bound by design; the win
+over XLA is fusing the sin/cos with both plane updates in one pass).
+
+`expectation`: Σ|psi|²·c — a tiled reduction using the sequential-grid
+accumulation idiom (out block revisited by every grid step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8 * 1024  # elements per block (64 sublanes × 128 lanes)
+
+
+def _phase_kernel(g_ref, re_ref, im_ref, c_ref, ore_ref, oim_ref):
+    g = g_ref[0, 0]
+    c = jnp.cos(g * c_ref[...])
+    s = jnp.sin(g * c_ref[...])
+    re = re_ref[...]
+    im = im_ref[...]
+    ore_ref[...] = re * c + im * s
+    oim_ref[...] = im * c - re * s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_phase(re, im, cutv, gamma, *, interpret: bool = False):
+    dim = re.shape[0]
+    tile = min(TILE, dim)
+    assert dim % tile == 0, (dim, tile)
+    g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (dim // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    ore, oim = pl.pallas_call(
+        _phase_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            spec,
+            spec,
+            spec,
+        ],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((dim,), jnp.float32),
+            jax.ShapeDtypeStruct((dim,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, re, im, cutv)
+    return ore, oim
+
+
+def _exp_kernel(re_ref, im_ref, c_ref, out_ref):
+    i = pl.program_id(0)
+    re = re_ref[...]
+    im = im_ref[...]
+    p = (re * re + im * im) * c_ref[...]
+    partial = jnp.sum(p)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = partial
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def expectation(re, im, cutv, *, interpret: bool = False):
+    dim = re.shape[0]
+    tile = min(TILE, dim)
+    assert dim % tile == 0, (dim, tile)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    out = pl.pallas_call(
+        _exp_kernel,
+        grid=(dim // tile,),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(re, im, cutv)
+    return out[0, 0]

@@ -1,0 +1,405 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell against the production meshes, with zero device allocation.
+
+The two lines above MUST stay first: jax locks the device count at first
+backend initialization, and the production meshes need 512 placeholder
+devices. (Tests and benchmarks never import this module — they see 1 CPU.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+  PYTHONPATH=src python -m repro.launch.dryrun --qaoa   # the paper's workload
+
+Each run writes JSON records under results/dryrun/ that EXPERIMENTS.md's
+tables are generated from (benchmarks/report.py).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import sharding as SH
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import analysis as RA
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def _mesh_desc(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+
+
+def _count_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(tree)
+    )
+
+
+def lower_cell(cell: SP.Cell, mesh, *, unroll: int = 1):
+    """Lower + compile one cell. Returns (compiled, lowered, meta).
+
+    `unroll` sets the layer-scan unroll factor: the dry-run compiles each
+    cell at unroll=1 and unroll=2 to undo cost_analysis's count-the-loop-
+    body-once behaviour (total = m1 + (L-1)·(m2-m1)).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.models import layers as ML
+    from repro.models import transformer as MT
+    from repro.models.model import build_model
+    from repro.training import optimizer as opt
+    from repro.training.train_step import TrainConfig, train_step
+
+    ML.configure_shard_hints(mesh.axis_names)
+    MT.set_layer_unroll(unroll)
+    import contextlib
+    ctx = contextlib.ExitStack()
+    ctx.enter_context(mesh)
+    overrides = {"param_dtype": "bfloat16"}
+    if getattr(lower_cell, "_cap_factor", None):
+        overrides["moe_capacity_factor"] = lower_cell._cap_factor
+    cfg = dataclasses.replace(cell.cfg, **overrides)
+    model = build_model(cfg)
+    abstract_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    if cell.kind == "train":
+        p_shard = SH.params_shardings(abstract_params, cfg, mesh, fsdp=True)
+        tcfg = TrainConfig(remat=True)
+        abstract_opt = jax.eval_shape(opt.init, abstract_params)
+        opt_shard = opt.AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=SH.params_shardings(abstract_opt.mu, cfg, mesh, fsdp=True),
+            nu=SH.params_shardings(abstract_opt.nu, cfg, mesh, fsdp=True),
+        )
+        from repro.training.train_step import TrainState
+
+        state_abstract = TrainState(params=abstract_params, opt=abstract_opt, ef=None)
+        state_shard = TrainState(params=p_shard, opt=opt_shard, ef=None)
+        b_spec = SH.batch_specs(cfg, mesh, "train")
+        batch_abstract = SP.input_specs(cell)
+        batch_shard = {
+            k: NamedSharding(mesh, b_spec[k]) for k in batch_abstract
+        }
+
+        def step(state, batch):
+            return train_step(state, batch, model, tcfg)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shard, batch_shard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_abstract, batch_abstract)
+
+    elif cell.kind == "prefill":
+        serve_fsdp = _count_bytes(abstract_params) / mesh.shape["model"] > 8e9
+        p_shard = SH.params_shardings(abstract_params, cfg, mesh, fsdp=serve_fsdp)
+        b_spec = SH.batch_specs(cfg, mesh, "prefill")
+        batch_abstract = SP.input_specs(cell)
+        batch_shard = {k: NamedSharding(mesh, b_spec[k]) for k in batch_abstract}
+
+        def step(params, batch):
+            return model.prefill(params, batch, s_max=cell.seq)
+
+        jitted = jax.jit(
+            step, in_shardings=(p_shard, batch_shard)
+        )
+        lowered = jitted.lower(abstract_params, batch_abstract)
+
+    else:  # decode
+        serve_fsdp = _count_bytes(abstract_params) / mesh.shape["model"] > 8e9
+        p_shard = SH.params_shardings(abstract_params, cfg, mesh, fsdp=serve_fsdp)
+        state_abstract = SP.decode_state_specs_abstract(cell)
+        ds_spec = SH.decode_state_specs(cfg, mesh, cell.batch)
+        state_shard = jax.tree.map(
+            lambda spec: NamedSharding(mesh, spec),
+            ds_spec,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        # drop specs for absent cache fields
+        from repro.models.decode import DecodeState
+
+        state_shard = DecodeState(
+            **{
+                f: getattr(state_shard, f)
+                if getattr(state_abstract, f) is not None
+                else None
+                for f in DecodeState._fields
+            }
+        )
+        tok_shard = NamedSharding(
+            mesh, P(SH._dp(mesh)) if cell.batch >= 16 else P()
+        )
+
+        def step(params, token, state):
+            return model.decode_step(params, token, state)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, tok_shard, state_shard),
+            out_shardings=(None, state_shard),
+            donate_argnums=(2,),
+        )
+        token_abstract = jax.ShapeDtypeStruct((cell.batch,), jnp.int32)
+        lowered = jitted.lower(abstract_params, token_abstract, state_abstract)
+
+    compiled = lowered.compile()
+    ctx.close()
+    ML.configure_shard_hints(())
+    MT.set_layer_unroll(1)
+    return compiled, lowered, {"param_bytes": _count_bytes(abstract_params)}
+
+
+def run_cell(cell: SP.Cell, *, multi_pod: bool, save: bool = True,
+             tag: str = ""):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": cell.arch,
+        "shape": cell.shape,
+        "mesh": _mesh_desc(mesh),
+        "chips": chips,
+        "kind": cell.kind,
+    }
+    try:
+        def measure(unroll):
+            compiled, lowered, meta = lower_cell(cell, mesh, unroll=unroll)
+            cost = compiled.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            cost = dict(cost) if cost else {}
+            coll = RA.parse_collectives(compiled.as_text())
+            return compiled, cost, coll, meta
+
+        compiled1, cost1, coll1, meta = measure(1)
+        try:
+            mem = compiled1.memory_analysis()
+            mem_str = str(mem)
+        except Exception as e:  # pragma: no cover
+            mem, mem_str = None, f"unavailable: {e}"
+        _, cost2, coll2, _ = measure(2)
+        n_l = cell.cfg.n_layers
+        cost, wire = RA.descanned_totals(cost1, coll1, cost2, coll2, n_l)
+        roof = RA.build_roofline(
+            arch=cell.arch,
+            shape=cell.shape,
+            mesh_desc=_mesh_desc(mesh),
+            chips=chips,
+            cost=cost,
+            hlo_text=None,
+            wire_bytes=wire,
+            collective_counts=coll1.counts,
+            model_flops=RA.model_flops_for_cell(cell, cell.cfg.n_active_params()),
+            memory_analysis=mem_str,
+        )
+        rec.update(roof.to_dict())
+        rec["status"] = "ok"
+        rec["compile_s"] = time.time() - t0
+        rec.update(meta)
+        print(
+            f"[dryrun] {cell.arch} × {cell.shape} × {rec['mesh']}: OK "
+            f"({rec['compile_s']:.1f}s) bottleneck={roof.bottleneck} "
+            f"compute={roof.compute_s:.4f}s memory={roof.memory_s:.4f}s "
+            f"collective={roof.collective_s:.4f}s"
+        )
+        print(f"  memory_analysis: {mem_str[:300]}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {cell.arch} × {cell.shape}: FAILED — {rec['error']}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        pod = "multipod" if multi_pod else "singlepod"
+        suffix = f"__{tag}" if tag else ""
+        fn = f"{cell.arch}__{cell.shape}__{pod}{suffix}.json"
+        slim = {k: v for k, v in rec.items() if k != "traceback"}
+        slim["tag"] = tag
+        with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+            json.dump(slim, f, indent=1, default=str)
+    return rec
+
+
+def run_qaoa_dryrun(*, multi_pod: bool, save: bool = True,
+                    schedule: str = "alternating", tag: str = "",
+                    group: int = 7):
+    """Dry-run the paper's own workload on the production mesh: the
+    solver-pool + sharded-statevector QAOA program (26 + log2(16) qubits)."""
+    from repro.core import distributed as dist
+    from repro.core.graph import Graph
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    n = 26 + int(np.log2(mesh.shape["model"]))  # 30 qubits on 16-way TP
+    rec = {
+        "arch": "paraqaoa",
+        "shape": f"sharded_statevector_{n}q",
+        "mesh": _mesh_desc(mesh),
+        "chips": chips,
+        "kind": "qaoa",
+        "schedule": schedule,
+    }
+    try:
+        e_abs = jax.ShapeDtypeStruct((2048, 2), jnp.int32)
+        w_abs = jax.ShapeDtypeStruct((2048,), jnp.float32)
+        g_abs = jax.ShapeDtypeStruct((3,), jnp.float32)
+
+        def run(edges, weights, gammas, betas):
+            return dist.sharded_qaoa(
+                edges, weights, n, gammas, betas, mesh,
+                schedule=schedule, top_k=4, group=group,
+            )
+
+        lowered = jax.jit(run).lower(e_abs, w_abs, g_abs, g_abs)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        try:
+            mem_str = str(compiled.memory_analysis())
+        except Exception as e:
+            mem_str = f"unavailable: {e}"
+        roof = RA.build_roofline(
+            arch="paraqaoa",
+            shape=rec["shape"],
+            mesh_desc=rec["mesh"],
+            chips=chips,
+            cost=dict(cost) if cost else {},
+            hlo_text=compiled.as_text(),
+            # statevector "model flops": p layers × (mixer matmuls + phase)
+            model_flops=3 * (2 ** n) * (2 * 128 + 8.0),
+            memory_analysis=mem_str,
+        )
+        rec.update(roof.to_dict())
+        rec["status"] = "ok"
+        rec["compile_s"] = time.time() - t0
+        print(
+            f"[dryrun] paraqaoa {n}q × {rec['mesh']}: OK "
+            f"({rec['compile_s']:.1f}s) bottleneck={roof.bottleneck}"
+        )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] paraqaoa: FAILED — {rec['error']}")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        pod = "multipod" if multi_pod else "singlepod"
+        suffix = f"__{tag}" if tag else ""
+        rec["tag"] = tag
+        with open(
+            os.path.join(RESULTS_DIR, f"paraqaoa__qaoa_{schedule}__{pod}{suffix}.json"),
+            "w",
+        ) as f:
+            json.dump({k: v for k, v in rec.items() if k != "traceback"}, f,
+                      indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SP.SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--qaoa", action="store_true")
+    ap.add_argument(
+        "--multi-pod", default="single", choices=["single", "multi", "both"]
+    )
+    ap.add_argument("--attn-shard", default="auto",
+                    choices=["auto", "heads", "head_dim", "replicated"])
+    ap.add_argument("--moe-shard", default="expert",
+                    choices=["expert", "expert_ff"])
+    ap.add_argument("--remat-policy", default="batch_dots",
+                    choices=["batch_dots", "dots", "everything", "off"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--moe-cap-shard", action="store_true")
+    ap.add_argument("--moe-cap-factor", type=float, default=None)
+    ap.add_argument("--qaoa-group", type=int, default=7)
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    args = ap.parse_args()
+    SH.set_strategy(attn=args.attn_shard, moe=args.moe_shard)
+    from repro.models import transformer as _MT
+
+    _MT.set_remat_policy(args.remat_policy)
+    _MT.set_seq_parallel(args.seq_parallel)
+    from repro.models import moe as _MOE
+
+    _MOE.set_capacity_sharding(args.moe_cap_shard)
+    if args.moe_cap_factor:
+        lower_cell._cap_factor = args.moe_cap_factor
+
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+
+    if args.qaoa:
+        for mp in pods:
+            for schedule in ("faithful", "alternating"):
+                run_qaoa_dryrun(multi_pod=mp, schedule=schedule, tag=args.tag,
+                                group=args.qaoa_group)
+        return
+
+    if args.all:
+        cells = SP.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all/--qaoa)"
+        cells = [SP.get_cell(args.arch, args.shape)]
+
+    failures = 0
+    for cell in cells:
+        if isinstance(cell, SP.SkipCell):
+            print(f"[dryrun] SKIP {cell.arch} × {cell.shape}: {cell.reason}")
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            for mp in pods:
+                pod = "multipod" if mp else "singlepod"
+                fn = f"{cell.arch}__{cell.shape}__{pod}.json"
+                with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+                    json.dump(
+                        {
+                            "arch": cell.arch,
+                            "shape": cell.shape,
+                            "status": "skipped",
+                            "reason": cell.reason,
+                        },
+                        f,
+                        indent=1,
+                    )
+            continue
+        for mp in pods:
+            if args.resume:
+                pod = "multipod" if mp else "singlepod"
+                suffix = f"__{args.tag}" if args.tag else ""
+                fn = os.path.join(
+                    RESULTS_DIR, f"{cell.arch}__{cell.shape}__{pod}{suffix}.json"
+                )
+                if os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("status") == "ok":
+                            print(f"[dryrun] resume-skip {cell.arch} × {cell.shape} × {pod}")
+                            continue
+            rec = run_cell(cell, multi_pod=mp, tag=args.tag)
+            failures += rec["status"] != "ok"
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

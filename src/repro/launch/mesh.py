@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for multi-device CPU tests (8 fake devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """All batch-shardable axes present in the mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,67 @@
+"""Serving driver: batched generation over the prefill/decode substrate.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --batch 4 --prompt-len 16 --new-tokens 32 --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serving.engine import Engine, ServeConfig
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (
+        configs.get_reduced(args.arch) if args.reduced else configs.get_config(args.arch)
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = Engine(
+        model, params,
+        ServeConfig(max_new_tokens=args.new_tokens, temperature=args.temperature),
+    )
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    batch = {
+        "tokens": jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+        )
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (args.batch, cfg.frontend_seq, cfg.d_model)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model)
+        )
+
+    t0 = time.time()
+    out = engine.generate(batch)
+    dt = time.time() - t0
+    tps = out.size / dt
+    print(f"[serve] arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({tps:.0f} tok/s on this host)")
+    print(f"[serve] first rows: {out[:2, :12].tolist()}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

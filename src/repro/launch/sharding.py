@@ -1,0 +1,264 @@
+"""GSPMD sharding rules: parameter-path → PartitionSpec.
+
+Megatron-style tensor parallelism on the `model` axis, batch data
+parallelism on `(pod, data)`:
+
+  embeddings / unembedding   vocab on `model`
+  attention q/o projections  head axis on `model` (falls back to head_dim
+                             when the head count doesn't divide the axis,
+                             e.g. gemma3-4b's 8 heads on a 16-way axis)
+  attention k/v projections  kv-head axis when divisible, else replicated
+  MLP up/gate ⊥ down         d_ff on `model` (column- then row-parallel)
+  MoE experts                expert axis on `model` (expert parallelism)
+  SSM in/out projections     d_inner on `model`
+  norms / biases / scalars   replicated
+
+Optimizer moments follow their parameter's spec (ZeRO-style sharding of
+optimizer state along `model` comes for free; `data`-axis ZeRO is left as a
+documented extension).
+
+Batch specs: tokens/labels on `(pod+data, None)`; decode KV caches shard
+the *sequence* axis across `data` when the batch is too small to shard
+(long_500k), else the batch axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------- strategy --
+# Perf-iteration knobs (EXPERIMENTS.md §Perf). Defaults reproduce the
+# baseline; the dry-run's --attn-shard/--moe-shard flags override them.
+STRATEGY = {
+    # attention projections: auto (heads→head_dim fallback) | heads |
+    # head_dim | replicated (no attention TP; MLP TP only)
+    "attn": "auto",
+    # moe experts: expert (E on model) | expert_ff (E on model, F on data)
+    "moe": "expert",
+}
+
+
+def set_strategy(**kwargs):
+    for k, v in kwargs.items():
+        assert k in STRATEGY, k
+        STRATEGY[k] = v
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _div(n: int, mesh: Mesh, axis: str = "model") -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def param_spec(path: tuple, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter. `path` is a tuple of str keys
+    (jax.tree_util key path entries stringified); `leaf` is the abstract
+    array (its rank may include the stacked leading layer axis)."""
+    keys = [str(k) for k in path]
+    name = keys[-1]
+    rank = len(leaf.shape)
+    tp = mesh.shape.get("model", 1)
+
+    def spec(*tail):
+        """Pad with leading Nones for the stacked layer axis if present."""
+        lead = rank - len(tail)
+        return P(*([None] * lead + list(tail)))
+
+    # ---- embeddings ----------------------------------------------------
+    if "embed" in keys or "unembed" in keys:
+        if _div(cfg.vocab_size, mesh):
+            return spec("model", None)
+        return spec(None, None)
+
+    # ---- attention -----------------------------------------------------
+    if name in ("wq", "wo"):
+        mode = STRATEGY["attn"]
+        heads_ok = cfg.n_heads and _div(cfg.n_heads, mesh) and mode in ("auto", "heads")
+        hd_ok = (
+            cfg.n_heads and _div(cfg.head_dim_, mesh)
+            and mode in ("auto", "head_dim")
+        )
+        if name == "wq":  # (d, H, hd)
+            if heads_ok:
+                return spec(None, "model", None)
+            if hd_ok:
+                return spec(None, None, "model")
+            return spec(None, None, None)
+        # wo: (H, hd, d)
+        if heads_ok:
+            return spec("model", None, None)
+        if hd_ok:
+            return spec(None, "model", None)
+        return spec(None, None, None)
+    if name in ("wk", "wv"):  # (d, Hkv, hd)
+        mode = STRATEGY["attn"]
+        if (
+            cfg.n_kv_heads and _div(cfg.n_kv_heads, mesh)
+            and mode in ("auto", "heads")
+        ):
+            return spec(None, "model", None)
+        if (
+            cfg.n_heads and _div(cfg.head_dim_, mesh)
+            and mode in ("auto", "head_dim")
+        ):
+            return spec(None, None, "model")
+        return spec(None, None, None)
+    if name in ("bq", "bk", "bv"):  # (H, hd)
+        nh = cfg.n_heads if name == "bq" else cfg.n_kv_heads
+        if nh and _div(nh, mesh):
+            return spec("model", None)
+        return spec(None, None)
+
+    # ---- MoE -----------------------------------------------------------
+    if name == "router":
+        return spec(None, None)
+    # expert weights live directly under "moe"; the arctic dense residual
+    # lives under "moe"/"dense" and follows the dense-MLP rules below
+    if "moe" in keys and "dense" not in keys and name in (
+        "w_gate", "w_up", "w_down"
+    ):
+        if _div(cfg.n_experts, mesh):
+            if STRATEGY["moe"] == "expert_ff" and _div(cfg.d_ff, mesh, "data"):
+                # E on model + F on data: halves per-device expert weights
+                # and lets the dispatch all-gather shrink accordingly
+                if name == "w_down":  # (E, F, D)
+                    return spec("model", "data", None)
+                return spec("model", None, "data")  # (E, D, F)
+            return spec("model", None, None)  # expert parallelism
+        return spec(None, None, None)
+
+    # ---- dense MLP (incl. arctic dense residual, zamba2 shared block) ---
+    if name in ("w_gate", "w_up"):
+        if _div(_d_ff_for(cfg, keys), mesh):
+            return spec(None, "model")
+        return spec(None, None)
+    if name == "w_down":
+        if _div(_d_ff_for(cfg, keys), mesh):
+            return spec("model", None)
+        return spec(None, None)
+    if name in ("b_up",):
+        return spec("model") if _div(_d_ff_for(cfg, keys), mesh) else spec(None)
+    if name in ("b_down",):
+        return spec(None)
+
+    # ---- SSM -----------------------------------------------------------
+    if name == "in_proj":  # (d, 2*di + 2*N + H) — heterogeneous columns
+        return spec(None, None)  # replicated; see DESIGN notes
+    if name == "out_proj":  # (di, d)
+        if _div(cfg.d_inner, mesh):
+            return spec("model", None)
+        return spec(None, None)
+    if name in ("conv_w", "conv_b", "a_log", "dt_bias", "d_skip"):
+        return P(*([None] * rank))
+
+    # ---- norms, scalars --------------------------------------------------
+    return P(*([None] * rank))
+
+
+def with_fsdp(spec: P, shape, mesh: Mesh, axes=("data",)) -> P:
+    """ZeRO-3-style extension: additionally shard the largest still-
+    unsharded, divisible dimension over the data axes. Parameters (and the
+    optimizer moments that follow their spec) then scale with the full
+    device count instead of only the model axis; GSPMD inserts the
+    all-gathers at use sites."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    cands = [
+        (shape[i], i)
+        for i in range(len(shape))
+        if parts[i] is None and shape[i] % size == 0 and shape[i] >= size
+    ]
+    if not cands:
+        return P(*parts)
+    _, best = max(cands)
+    parts[best] = axes if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+def params_shardings(abstract_params, cfg: ModelConfig, mesh: Mesh,
+                     fsdp: bool = False, fsdp_min_size: int = 1 << 20):
+    """fsdp=True: train-style ZeRO-3 sharding over the data axes (skips
+    small leaves where gather latency would dominate)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def per_leaf(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        spec = param_spec(keys, leaf, cfg, mesh)
+        if fsdp and int(np.prod(leaf.shape)) >= fsdp_min_size:
+            spec = with_fsdp(spec, leaf.shape, mesh, axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, abstract_params)
+
+
+def _key_str(k) -> str:
+    # DictKey('x') → x ; SequenceKey(i) → str(i)
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str):
+    """PartitionSpecs for the data batch of a given shape kind."""
+    dp = _dp(mesh)
+    if kind == "train":
+        specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if cfg.family == "vlm":
+            specs["patches"] = P(dp, None, None)
+        if cfg.family == "audio":
+            specs["frames"] = P(dp, None, None)
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": P(dp, None)}
+        if cfg.family == "vlm":
+            specs["patches"] = P(dp, None, None)
+        if cfg.family == "audio":
+            specs["frames"] = P(dp, None, None)
+        return specs
+    raise ValueError(kind)
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Shardings for DecodeState. Batch axis when it divides the dp axes;
+    otherwise sequence-parallel over `data` (long-context single-request)."""
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,)) if a]))
+    shard_batch = batch % max(dp_size, 1) == 0 and batch >= dp_size
+    b_ax = dp if shard_batch else None
+    s_ax = None if shard_batch else "data"
+    kv_head_ax = "model" if _div(cfg.n_kv_heads or 1, mesh) else None
+
+    from repro.models.decode import DecodeState
+
+    def kv(_):
+        return P(None, b_ax, s_ax, kv_head_ax, None)
+
+    specs = {}
+    specs["kv_k"] = kv(None)
+    specs["kv_v"] = kv(None)
+    specs["ssm_h"] = P(None, b_ax, "model" if _div(cfg.ssm_heads, mesh) and cfg.ssm_state else None, None, None)
+    specs["ssm_conv"] = P(None, b_ax, None, None)
+    specs["shared_k"] = kv(None)
+    specs["shared_v"] = kv(None)
+    specs["cross_k"] = kv(None)
+    specs["cross_v"] = kv(None)
+    specs["pos"] = P(b_ax)
+    return DecodeState(**specs)
+
+
+def _d_ff_for(cfg: ModelConfig, keys) -> int:
+    # the zamba2 shared block and whisper MLPs use cfg.d_ff; arctic's dense
+    # residual uses d_ff_dense (== d_ff here). One width fits all.
+    return max(cfg.d_ff, 1)

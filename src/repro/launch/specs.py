@@ -1,0 +1,125 @@
+"""Input shape cells: the assigned (architecture × input-shape) grid.
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step function — weak-type-correct, shardable, zero
+device allocation. `step_kind` tells the dry-run which program to lower:
+train_step for `train_*`, prefill for `prefill_*`, decode_step for
+`decode_*` / `long_*`.
+
+Skip policy (DESIGN.md §4): long_500k runs only for sub-quadratic archs
+(ssm / hybrid / gemma3's 5:1 local:global); pure full-attention archs skip
+it. Every skip is an explicit `SkipCell` with the reason string that lands
+in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524_288, batch=1, kind="decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic decode paths)
+LONG_OK = {"mamba2_1_3b", "zamba2_2_7b", "gemma3_4b", "gemma3_27b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipCell:
+    arch: str
+    shape: str
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+    cfg: ModelConfig
+
+
+def all_cells():
+    """The 40-cell grid; skipped cells appear as SkipCell records."""
+    out = []
+    for arch in configs.lm_arch_ids():
+        cfg = configs.get_config(arch)
+        for shape, meta in SHAPES.items():
+            if shape == "long_500k" and arch not in LONG_OK:
+                out.append(
+                    SkipCell(
+                        arch,
+                        shape,
+                        "pure full-attention decode at 524k context is "
+                        "quadratic-cost/cache-infeasible by design; run only "
+                        "for SSM/hybrid/5:1-local archs (DESIGN.md §4)",
+                    )
+                )
+                continue
+            out.append(
+                Cell(arch, shape, meta["kind"], meta["seq"], meta["batch"], cfg)
+            )
+    return out
+
+
+def get_cell(arch: str, shape: str) -> Cell:
+    arch = configs.canonical(arch)
+    meta = SHAPES[shape]
+    return Cell(
+        arch, shape, meta["kind"], meta["seq"], meta["batch"],
+        configs.get_config(arch),
+    )
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cell: Cell):
+    """Abstract data inputs for the cell's step function."""
+    cfg = cell.cfg
+    b, s = cell.batch, cell.seq
+    if cell.kind == "train":
+        text = s - (cfg.frontend_seq if cfg.family == "vlm" else 0)
+        specs = {
+            "tokens": _sds((b, text), jnp.int32),
+            "labels": _sds((b, text), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["patches"] = _sds((b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if cell.kind == "prefill":
+        text = s - (cfg.frontend_seq if cfg.family == "vlm" else 0)
+        specs = {"tokens": _sds((b, text), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["patches"] = _sds((b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if cell.kind == "decode":
+        return {"token": _sds((b,), jnp.int32)}
+    raise ValueError(cell.kind)
+
+
+def decode_state_specs_abstract(cell: Cell):
+    """Abstract DecodeState for decode cells (cache sized to the cell seq)."""
+    from repro.models import decode as D
+
+    return jax.eval_shape(
+        lambda: D.init_decode_state(cell.cfg, cell.batch, cell.seq)
+    )

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, reduced
+from repro.models.model import Model, build_model
+
+__all__ = ["ModelConfig", "reduced", "Model", "build_model"]

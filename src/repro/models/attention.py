@@ -1,0 +1,179 @@
+"""Attention blocks: GQA with RoPE, causal/sliding-window masks, cross
+attention (encoder-decoder), and single-token decode against a KV cache.
+
+The sliding window is a *traced* scalar (0 = global/full attention), so a
+layer stack with mixed local/global layers (gemma3's 5:1 pattern) runs as a
+single scanned program — no per-layer retracing or lax.cond.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype,
+              bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.normal_init(ks[0], (d, n_heads, head_dim), dtype),
+        "wk": L.normal_init(ks[1], (d, n_kv, head_dim), dtype),
+        "wv": L.normal_init(ks[2], (d, n_kv, head_dim), dtype),
+        "wo": L.normal_init(ks[3], (n_heads, head_dim, d), dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def _project_qkv(params, x, x_kv=None):
+    x_kv = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_kv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_kv, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """(B,S,H,hd) × (B,T,Hkv,hd) → (B, Hkv, H/Hkv, S, T)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, s, hkv, h // hkv, hd)
+    return jnp.einsum("bsgrd,btgd->bgrst", qg, k)
+
+
+def _gqa_out(weights, v):
+    """(B,G,R,S,T) × (B,T,G,hd) → (B,S,H,hd)."""
+    b, g, r, s, t = weights.shape
+    out = jnp.einsum("bgrst,btgd->bsgrd", weights, v)
+    return out.reshape(b, s, g * r, -1)
+
+
+def attention(
+    params,
+    x,
+    *,
+    rope_theta: float,
+    window,  # traced scalar: 0 = full attention
+    causal: bool = True,
+    x_kv=None,
+    positions=None,
+    kv_positions=None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, D). Returns (B, S, D), or (out, (k, v)) with *rotated* keys
+    when return_kv (what a decode-time KV cache must hold).
+    Cross-attention when x_kv is given (no RoPE, whisper-style).
+    """
+    b, s, _ = x.shape
+    is_cross = x_kv is not None
+    q, k, v = _project_qkv(params, x, x_kv)
+    t = k.shape[1]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if not is_cross:
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(
+            k, positions if kv_positions is None else kv_positions, rope_theta
+        )
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = _gqa_scores(q, k).astype(jnp.float32) * scale  # (B,G,R,S,T)
+
+    qi = positions[:, None, None, :, None]  # (B,1,1,S,1)
+    ki = (
+        jnp.arange(t, dtype=jnp.int32)
+        if kv_positions is None
+        else kv_positions[0]
+    )[None, None, None, None, :]
+    mask = jnp.ones((b, 1, 1, s, t), dtype=bool)
+    if causal and not is_cross:
+        mask = mask & (ki <= qi)
+        w = jnp.asarray(window, jnp.int32)
+        mask = mask & ((w == 0) | (qi - ki < w))
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(weights, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, Hkv, hd)
+    v: jnp.ndarray  # (B, S_max, Hkv, hd)
+
+
+def decode_attention(
+    params,
+    x,  # (B, 1, D) current token activations
+    cache: KVCache,
+    pos,  # (B,) int32 current position (number of tokens already cached)
+    *,
+    rope_theta: float,
+    window,
+):
+    """One decode step: append this token's K/V, attend over the cache.
+
+    The cache sequence axis is shardable (sequence-parallel decode for the
+    500k-token shapes): the only cross-shard ops are the softmax reductions.
+    """
+    b, one, d = x.shape
+    q, k_new, v_new = _project_qkv(params, x)
+    q = L.apply_rope(q, pos[:, None], rope_theta)
+    k_new = L.apply_rope(k_new, pos[:, None], rope_theta)
+
+    k = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))(
+        cache.k, k_new.astype(cache.k.dtype), pos
+    )
+    v = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))(
+        cache.v, v_new.astype(cache.v.dtype), pos
+    )
+
+    s_max = k.shape[1]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = _gqa_scores(q, k.astype(q.dtype)).astype(jnp.float32) * scale
+    ki = jnp.arange(s_max, dtype=jnp.int32)[None, None, None, None, :]
+    qi = pos[:, None, None, None, None]
+    mask = ki <= qi
+    w = jnp.asarray(window, jnp.int32)
+    mask = mask & ((w == 0) | (qi - ki < w))
+    scores = jnp.where(mask, scores, -1e30)
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(weights, v.astype(x.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, KVCache(k, v)
+
+
+def cross_decode_attention(params, x, enc_k, enc_v, *, rope_theta):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = _gqa_scores(q, enc_k).astype(jnp.float32) * scale
+    weights = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(weights, enc_v)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def precompute_cross_kv(params, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return k, v

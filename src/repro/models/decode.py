@@ -1,0 +1,322 @@
+"""Serving paths: prefill (build caches over a prompt) and single-token
+decode steps, for every architecture family.
+
+Cache layout (stacked on a leading layer axis, scanned like the blocks):
+  attn families:  DecodeState.kv      (L, B, S_max, Hkv, hd) ×2
+  ssm/hybrid:     DecodeState.ssm     (L, B, H, N, P) + conv history;
+                  hybrid adds shared-attention KV per *application*
+                  (n_apps, B, S_max, Hkv, hd) — Zamba2 shares weights
+                  across applications but each application has its own KV.
+  audio (enc-dec): self-KV per decoder layer + precomputed cross-K/V.
+
+`decode_32k` / `long_500k` lower exactly these functions: one new token
+against a seq_len-sized cache. The cache sequence axis is the
+sequence-parallel shard axis for the 500k single-request shapes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+class DecodeState(NamedTuple):
+    kv_k: Optional[jnp.ndarray] = None  # (L, B, S_max, Hkv, hd)
+    kv_v: Optional[jnp.ndarray] = None
+    ssm_h: Optional[jnp.ndarray] = None  # (L, B, H, N, P)
+    ssm_conv: Optional[jnp.ndarray] = None  # (L, B, W-1, C)
+    shared_k: Optional[jnp.ndarray] = None  # (n_apps, B, S_max, Hkv, hd)
+    shared_v: Optional[jnp.ndarray] = None
+    cross_k: Optional[jnp.ndarray] = None  # (L, B, T_enc, Hkv, hd)
+    cross_v: Optional[jnp.ndarray] = None
+    pos: Optional[jnp.ndarray] = None  # (B,) tokens cached so far
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return sum(1 for k in cfg.layer_kinds() if k == "ssm_attn")
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, s_max: int) -> DecodeState:
+    """Empty caches (used directly by the decode-shape dry-runs)."""
+    dt = cfg.cdtype
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_ if cfg.n_heads else 0
+    state = {}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        state["kv_k"] = jnp.zeros((cfg.n_layers, batch, s_max, hkv, hd), dt)
+        state["kv_v"] = jnp.zeros((cfg.n_layers, batch, s_max, hkv, hd), dt)
+    if cfg.family in ("ssm", "hybrid"):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        state["ssm_h"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        )
+        state["ssm_conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv_width - 1, conv_ch), dt
+        )
+    if cfg.family == "hybrid":
+        apps = n_attn_apps(cfg)
+        state["shared_k"] = jnp.zeros((apps, batch, s_max, hkv, hd), dt)
+        state["shared_v"] = jnp.zeros((apps, batch, s_max, hkv, hd), dt)
+    if cfg.family == "audio":
+        state["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.encoder_seq, hkv, hd), dt
+        )
+        state["cross_v"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.encoder_seq, hkv, hd), dt
+        )
+    state["pos"] = jnp.zeros((batch,), jnp.int32)
+    return DecodeState(**state)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+def prefill(params, batch, cfg: ModelConfig, s_max: int):
+    """Run the prompt through the model, returning (last-token logits,
+    DecodeState with caches filled for positions [0, S))."""
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.cdtype)
+    enc_out = None
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(cfg.cdtype), x], axis=1)
+    if cfg.family == "audio":
+        enc_out = T.encoder_forward(params, batch["frames"].astype(cfg.cdtype), cfg)
+
+    if cfg.family in ("ssm", "hybrid"):
+        out, state = _prefill_ssm(params, x, cfg, s_max)
+    else:
+        out, state = _prefill_attn(params, x, cfg, s_max, enc_out)
+
+    h = L.rmsnorm(params["final_norm"], out[:, -1:, :], cfg.norm_eps)
+    table = (
+        params["embed"]["table"] if cfg.tie_embeddings else params["unembed"]["table"]
+    )
+    logits = jnp.einsum("bsd,vd->bsv", h, table.astype(h.dtype))
+    seq_len = x.shape[1]
+    state = state._replace(pos=jnp.full((bsz,), seq_len, jnp.int32))
+    return logits.astype(jnp.float32), state
+
+
+def _pad_cache(kv, s_max):
+    l, b, s, hkv, hd = kv.shape
+    return jnp.zeros((l, b, s_max, hkv, hd), kv.dtype).at[:, :, :s].set(kv)
+
+
+def _prefill_attn(params, x, cfg, s_max, enc_out):
+    out = T._attn_stack(params, x, cfg, enc_out=enc_out, collect_kv=True)
+    k, v = out.kv
+    state_kwargs = dict(
+        kv_k=_pad_cache(k.astype(cfg.cdtype), s_max),
+        kv_v=_pad_cache(v.astype(cfg.cdtype), s_max),
+    )
+    if cfg.family == "audio":
+        ck, cv = jax.vmap(lambda bp: A.precompute_cross_kv(bp, enc_out))(
+            params["blocks"]["cross"]
+        )
+        state_kwargs["cross_k"] = ck.astype(cfg.cdtype)
+        state_kwargs["cross_v"] = cv.astype(cfg.cdtype)
+    return out.x, DecodeState(**state_kwargs)
+
+
+def _prefill_ssm(params, x, cfg, s_max):
+    """SSM/hybrid prefill: run per-layer blocks collecting final SSM states
+    (and shared-attention KV for hybrid)."""
+    kinds = cfg.layer_kinds()
+    is_attn = jnp.asarray([k == "ssm_attn" for k in kinds], jnp.bool_)
+    shared = params.get("shared_attn")
+    bsz, s, _ = x.shape
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    w = cfg.ssm_conv_width
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, attn_here = xs
+        kv = None
+        if shared is not None:
+            def with_attn(x):
+                h, (k, v) = A.attention(
+                    shared["attn"],
+                    L.rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                    rope_theta=cfg.rope_theta,
+                    window=jnp.int32(0),
+                    causal=True,
+                    return_kv=True,
+                )
+                x = x + h
+                y = L.mlp_apply(
+                    shared["mlp"],
+                    L.rmsnorm(shared["ln2"], x, cfg.norm_eps),
+                    cfg.act,
+                )
+                return x + y, k, v
+
+            def without(x):
+                z = jnp.zeros((bsz, s, cfg.n_kv_heads, cfg.head_dim_), x.dtype)
+                return x, z, z
+
+            x, k, v = jax.lax.cond(attn_here, with_attn, without, x)
+            kv = (k, v)
+        xn = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        # conv history: last W-1 pre-conv channel inputs
+        proj = jnp.einsum("bsd,de->bse", xn, bp["ssm"]["in_proj"])
+        _, xin, b_mat, c_mat, _ = S._split_proj(
+            proj, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        )
+        conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+        hist = jnp.pad(conv_in, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1) :, :]
+        y, h_fin = S.ssm_block(bp["ssm"], xn, cfg)
+        return (x + y, aux), (h_fin, hist, kv)
+
+    (x, _), (h_fins, hists, kvs) = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], is_attn),
+        unroll=T._unroll(cfg.n_layers),
+    )
+    state_kwargs = dict(ssm_h=h_fins, ssm_conv=hists.astype(cfg.cdtype))
+    if shared is not None:
+        k, v = kvs
+        apps_idx = np.nonzero(np.asarray([k_ == "ssm_attn" for k_ in kinds]))[0]
+        state_kwargs["shared_k"] = _pad_cache(
+            k[apps_idx].astype(cfg.cdtype), s_max
+        )
+        state_kwargs["shared_v"] = _pad_cache(
+            v[apps_idx].astype(cfg.cdtype), s_max
+        )
+    return x, DecodeState(**state_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+def decode_step(params, token, state: DecodeState, cfg: ModelConfig):
+    """One token in, one token's logits out. token: (B,) int32."""
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.cdtype)
+    pos = state.pos
+
+    if cfg.family in ("ssm", "hybrid"):
+        x, state = _decode_ssm(params, x, state, cfg)
+    else:
+        x, state = _decode_attn(params, x, state, cfg)
+
+    h = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = (
+        params["embed"]["table"] if cfg.tie_embeddings else params["unembed"]["table"]
+    )
+    logits = jnp.einsum("bsd,vd->bsv", h, table.astype(h.dtype))
+    state = state._replace(pos=pos + 1)
+    return logits[:, 0].astype(jnp.float32), state
+
+
+def _decode_attn(params, x, state: DecodeState, cfg):
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    is_moe = bool(cfg.n_experts)
+    is_cross = cfg.family == "audio"
+    pos = state.pos
+
+    def body(x, xs):
+        if is_cross:
+            bp, window, ck, cv, xk, xv = xs
+        else:
+            bp, window, ck, cv = xs
+        h, new_cache = A.decode_attention(
+            bp["attn"],
+            L.rmsnorm(bp["ln1"], x, cfg.norm_eps),
+            A.KVCache(ck, cv),
+            pos,
+            rope_theta=cfg.rope_theta,
+            window=window,
+        )
+        x = x + h
+        if is_cross:
+            c = A.cross_decode_attention(
+                bp["cross"],
+                L.rmsnorm(bp["ln_cross"], x, cfg.norm_eps),
+                xk.astype(x.dtype),
+                xv.astype(x.dtype),
+                rope_theta=cfg.rope_theta,
+            )
+            x = x + c
+        xn = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            y, _ = M.moe_apply(
+                bp["moe"], xn, k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor,
+                dense_residual=cfg.moe_dense_residual,
+            )
+        else:
+            y = L.mlp_apply(bp["mlp"], xn, cfg.act)
+        return x + y, (new_cache.k, new_cache.v)
+
+    xs = (params["blocks"], windows, state.kv_k, state.kv_v)
+    if is_cross:
+        xs = xs + (state.cross_k, state.cross_v)
+    x, (nk, nv) = jax.lax.scan(body, x, xs, unroll=T._unroll(cfg.n_layers))
+    return x, state._replace(kv_k=nk, kv_v=nv)
+
+
+def _decode_ssm(params, x, state: DecodeState, cfg):
+    kinds = cfg.layer_kinds()
+    is_attn = jnp.asarray([k == "ssm_attn" for k in kinds], jnp.bool_)
+    shared = params.get("shared_attn")
+    pos = state.pos
+
+    # SSM per-layer states travel as scan xs/ys; shared KV travels in carry.
+    def body2(carry, xs):
+        x, app_i, sk, sv = carry
+        (bp, attn_here, h_l, conv_l) = xs
+        if shared is not None:
+            def with_attn(op):
+                x, app_i, sk, sv = op
+                ck = jax.lax.dynamic_index_in_dim(sk, app_i, 0, keepdims=False)
+                cv = jax.lax.dynamic_index_in_dim(sv, app_i, 0, keepdims=False)
+                h, new_cache = A.decode_attention(
+                    shared["attn"],
+                    L.rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                    A.KVCache(ck, cv),
+                    pos,
+                    rope_theta=cfg.rope_theta,
+                    window=jnp.int32(0),
+                )
+                sk = jax.lax.dynamic_update_index_in_dim(sk, new_cache.k, app_i, 0)
+                sv = jax.lax.dynamic_update_index_in_dim(sv, new_cache.v, app_i, 0)
+                x = x + h
+                y = L.mlp_apply(
+                    shared["mlp"],
+                    L.rmsnorm(shared["ln2"], x, cfg.norm_eps),
+                    cfg.act,
+                )
+                return x + y, app_i + 1, sk, sv
+
+            x, app_i, sk, sv = jax.lax.cond(
+                attn_here, with_attn, lambda op: op, (x, app_i, sk, sv)
+            )
+        y, new_state = S.ssm_decode_step(
+            bp["ssm"],
+            L.rmsnorm(bp["ln1"], x, cfg.norm_eps),
+            S.SSMState(h=h_l, conv=conv_l),
+            cfg,
+        )
+        return (x + y, app_i, sk, sv), (new_state.h, new_state.conv)
+
+    sk = state.shared_k if state.shared_k is not None else jnp.zeros((1,))
+    sv = state.shared_v if state.shared_v is not None else jnp.zeros((1,))
+    (x, _, sk, sv), (nh, nconv) = jax.lax.scan(
+        body2,
+        (x, jnp.int32(0), sk, sv),
+        (params["blocks"], is_attn, state.ssm_h, state.ssm_conv),
+        unroll=T._unroll(cfg.n_layers),
+    )
+    new = state._replace(ssm_h=nh, ssm_conv=nconv)
+    if shared is not None:
+        new = new._replace(shared_k=sk, shared_v=sv)
+    return x, new

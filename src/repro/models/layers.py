@@ -1,0 +1,146 @@
+"""Primitive layers: norms, RoPE, initializers, MLPs.
+
+Pure-functional: every layer is (init(key, ...) -> params) plus
+(apply(params, x, ...) -> y). Parameters live in nested dicts; block
+parameters are stacked on a leading layer axis and driven by lax.scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ------------------------------------------------- activation shard hints --
+# The launcher/dry-run configures the mesh axis names once; model code then
+# drops with_sharding_constraint hints that are exact no-ops in single-
+# device tests. This is how we pin (B, S, V) logits to (dp, None, "model")
+# instead of letting GSPMD replicate the vocab axis (150 GB/device temp).
+_HINT_AXES: frozenset = frozenset()
+
+
+def configure_shard_hints(axis_names) -> None:
+    global _HINT_AXES
+    _HINT_AXES = frozenset(axis_names or ())
+
+
+def shard_hint(x, *spec):
+    """with_sharding_constraint against configured mesh axes; no-op when
+    unconfigured. Tuple entries keep only the axes present in the mesh."""
+    if not _HINT_AXES:
+        return x
+    parts = []
+    for s in spec:
+        if s is None:
+            parts.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in _HINT_AXES)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(s if s in _HINT_AXES else None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+DP = ("pod", "data")  # batch-parallel axis group
+
+
+# ----------------------------------------------------------------- inits --
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+# ----------------------------------------------------------------- norms --
+def rmsnorm_init(dtype):
+    def init(key, d):
+        return {"scale": jnp.ones((d,), dtype)}
+
+    return init
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(key, d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (
+        y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    ).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE --
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP --
+def mlp_init(key, d: int, f: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU
+        return {
+            "w_gate": normal_init(ks[0], (d, f), dtype),
+            "w_up": normal_init(ks[1], (d, f), dtype),
+            "w_down": normal_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "w_up": normal_init(ks[0], (d, f), dtype),
+        "b_up": jnp.zeros((f,), dtype),
+        "w_down": normal_init(ks[1], (f, d), dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_apply(params, x, act: str):
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...f,fd->...d", h, params["w_down"])
+    h = jnp.einsum("...d,df->...f", x, params["w_up"]) + params["b_up"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"]) + params["b_down"]
+
+
+# ------------------------------------------------------------- embedding --
+def embedding_init(key, vocab: int, d: int, dtype):
+    return {"table": normal_init(key, (vocab, d), dtype, scale=0.01)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x, table)

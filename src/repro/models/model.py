@@ -1,0 +1,42 @@
+"""Model facade: build once from a ModelConfig, get init/apply/serve fns."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def forward(self, params, batch, remat: bool = False):
+        return T.forward(params, batch, self.cfg, remat=remat)
+
+    def prefill(self, params, batch, s_max: int):
+        return D.prefill(params, batch, self.cfg, s_max)
+
+    def decode_step(self, params, token, state):
+        return D.decode_step(params, token, state, self.cfg)
+
+    def init_decode_state(self, batch: int, s_max: int):
+        return D.init_decode_state(self.cfg, batch, s_max)
+
+    def param_shapes(self, key=None):
+        """Abstract parameter pytree (no allocation) for the dry-run."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: T.init_params(k, self.cfg), key)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Dispatch is sort-based (dropping, Switch/GShard-style): token→expert
+assignments are sorted by expert id, each expert takes up to C slots, and
+overflow tokens fall back to the residual path. Expert weights carry a
+leading E axis that shards over the `model` mesh axis (expert parallelism);
+the per-expert compute is a batched einsum on the MXU.
+
+Supports the two assigned MoE archs:
+  - moonshot-v1-16b-a3b: 64 experts, top-6
+  - arctic-480b: 128 experts, top-2, plus a *dense residual* FFN in
+    parallel (Snowflake's dense-MoE hybrid) — `dense_residual=True`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+# Perf knob (EXPERIMENTS.md §Perf, arctic cell): shard the dispatched
+# capacity axis over the data axes so (E, C, D) activations scale with the
+# full mesh instead of only the expert axis.
+_CAP_SHARD = False
+
+
+def set_capacity_sharding(on: bool) -> None:
+    global _CAP_SHARD
+    _CAP_SHARD = bool(on)
+
+
+def moe_init(key, d: int, f: int, n_experts: int, dtype,
+             dense_residual: bool = False, f_dense: Optional[int] = None):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.normal_init(ks[0], (d, n_experts), dtype, scale=0.01),
+        "w_gate": L.normal_init(ks[1], (n_experts, d, f), dtype),
+        "w_up": L.normal_init(ks[2], (n_experts, d, f), dtype),
+        "w_down": L.normal_init(ks[3], (n_experts, f, d), dtype),
+    }
+    if dense_residual:
+        p["dense"] = L.mlp_init(ks[4], d, f_dense or f, "silu", dtype)
+    return p
+
+
+def moe_apply(
+    params,
+    x,  # (B, S, D)
+    *,
+    k: int,
+    capacity_factor: float = 1.25,
+    dense_residual: bool = False,
+):
+    """Returns (y, aux_loss). aux_loss is the load-balancing loss."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style) ---------------------
+    me = jnp.mean(probs, axis=0)  # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], e)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----------------------------------------------
+    cap = int(np.ceil(t * k / e * capacity_factor))
+    cap = max(cap, 1)
+    ea = expert_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(ea, stable=True)
+    sorted_e = ea[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - first  # slot within expert
+
+    # slot table: (E*C,) of flat assignment ids; sentinel = t*k (dropped)
+    slot_idx = sorted_e * cap + rank
+    valid = rank < cap
+    table = jnp.full((e * cap,), t * k, dtype=jnp.int32)
+    table = table.at[jnp.where(valid, slot_idx, e * cap)].set(
+        order, mode="drop"
+    )
+
+    token_of = jnp.where(table < t * k, table // k, t)  # t = zero-pad row
+    gate_of = jnp.where(
+        table < t * k, gate_vals.reshape(-1)[jnp.minimum(table, t * k - 1)], 0.0
+    )
+
+    xp = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    x_e = xp[token_of].reshape(e, cap, d)  # (E, C, D)
+    cap_ax = ("pod", "data") if _CAP_SHARD else None
+    x_e = L.shard_hint(x_e, "model", cap_ax, None)  # expert-parallel dispatch
+
+    g = jnp.einsum("ecd,edf->ecf", x_e, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", x_e, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, D)
+    y_e = L.shard_hint(y_e, "model", cap_ax, None)
+
+    y_flat = y_e.reshape(e * cap, d) * gate_of[:, None].astype(y_e.dtype)
+    y = jnp.zeros((t + 1, d), y_e.dtype).at[token_of].add(y_flat)[:t]
+    y = y.reshape(b, s, d)
+
+    if dense_residual:
+        y = y + L.mlp_apply(params["dense"], x, "silu")
+    return y.astype(x.dtype), aux

@@ -1,0 +1,203 @@
+"""Mamba2 / SSD (state-space duality) block, chunked matmul form.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): the
+sequence is processed in chunks of Q tokens; within a chunk the recurrence
+is materialized as a (Q, Q) lower-triangular attention-like matmul (MXU
+food), and across chunks a small lax.scan carries the (H, N, P) state.
+Per-step recurrence (for decode) and the chunked form are tested to agree.
+
+Block structure follows Mamba2: in_proj → causal depthwise conv on
+(x, B, C) → SSD → gated RMSNorm → out_proj.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+def ssm_init(key, d_model: int, d_inner: int, n_heads: int, d_state: int,
+             conv_width: int, dtype):
+    ks = jax.random.split(key, 6)
+    p_head = d_inner // n_heads
+    conv_ch = d_inner + 2 * d_state
+    return {
+        # projects to [z, x, B, C, dt]
+        "in_proj": L.normal_init(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), dtype
+        ),
+        "conv_w": L.normal_init(ks[1], (conv_width, conv_ch), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, float(n_heads), n_heads).astype(jnp.float32)
+        ),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": L.normal_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(proj, d_inner, d_state, n_heads):
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner : 2 * d_inner]
+    b = proj[..., 2 * d_inner : 2 * d_inner + d_state]
+    c = proj[..., 2 * d_inner + d_state : 2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,C), w (W,C) → (B,S,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: unrolled taps
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) values; dt: (B,S,H) step sizes (post-softplus);
+    a: (H,) negative decay rates; b_mat/c_mat: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = chunk
+    s_pad = ((s + q - 1) // q) * q
+    nc = s_pad // q
+
+    def pad(t):
+        if s_pad == s:
+            return t
+        widths = [(0, 0), (0, s_pad - s)] + [(0, 0)] * (t.ndim - 2)
+        return jnp.pad(t, widths)
+
+    # zero-dt padding is exact: decay = exp(a·0) = 1 and the update term
+    # carries a dt factor, so padded steps leave the state untouched.
+    xf = pad(x.astype(jnp.float32))
+    dtf = pad(dt.astype(jnp.float32))
+    bf = pad(b_mat.astype(jnp.float32))
+    cf = pad(c_mat.astype(jnp.float32))
+
+    # chunk views
+    xc = xf.reshape(bsz, nc, q, h, p)
+    dtc = dtf.reshape(bsz, nc, q, h)
+    bc = bf.reshape(bsz, nc, q, n)
+    cc = cf.reshape(bsz, nc, q, n)
+    s = s_pad  # trimmed again on return
+
+    l = a[None, None, None, :] * dtc  # (B,nc,Q,H) log-decay per step
+    lc = jnp.cumsum(l, axis=2)  # inclusive cumulative log decay
+    ltot = lc[:, :, -1:, :]  # (B,nc,1,H)
+
+    # ---- intra-chunk (quadratic-in-Q matmul form) -------------------------
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
+    decay = jnp.exp(lc[:, :, :, None, :] - lc[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    m = cb[:, :, :, :, None] * decay * dtc[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # ---- chunk summaries and inter-chunk scan -----------------------------
+    w_sum = jnp.exp(ltot - lc) * dtc  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w_sum, bc, xc)  # (B,nc,H,N,P)
+    g_chunk = jnp.exp(ltot[:, :, 0, :])  # (B,nc,H) total chunk decay
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+
+    def scan_fn(h_prev, inp):
+        s_c, g_c = inp  # (B,H,N,P), (B,H)
+        h_in = h_prev  # state entering this chunk
+        h_next = g_c[:, :, None, None] * h_prev + s_c
+        return h_next, h_in
+
+    (h_final, h_ins) = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(g_chunk, 1, 0)),
+    )
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B,nc,H,N,P) state at chunk start
+
+    y_inter = jnp.einsum(
+        "bcin,bchnp,bcih->bcihp", cc, h_ins, jnp.exp(lc)
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, : x.shape[1]]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(h, x_t, dt_t, a, b_t, c_t):
+    """Single-token recurrence: h (B,H,N,P); x_t (B,H,P); dt_t (B,H);
+    b_t/c_t (B,N). Returns (y_t (B,H,P), h')."""
+    g = jnp.exp(a[None, :] * dt_t)  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+    h_new = g[:, :, None, None] * h + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_t, h_new)
+    return y, h_new
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # (B, H, N, P) float32
+    conv: jnp.ndarray  # (B, W-1, conv_channels) rolling conv inputs
+
+
+def ssm_block(params, x, cfg, h0=None):
+    """Full Mamba2 block over a sequence. x: (B,S,D) → (B,S,D)."""
+    d_inner, d_state, n_heads = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p_head = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xin, b_mat, c_mat, dt = _split_proj(proj, d_inner, d_state, n_heads)
+
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner]
+    b_mat = conv_out[..., d_inner : d_inner + d_state]
+    c_mat = conv_out[..., d_inner + d_state :]
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = xin.reshape(*xin.shape[:2], n_heads, p_head)
+    y, h_fin = ssd_chunked(xh, dtp, a, b_mat, c_mat, cfg.ssm_chunk, h0)
+    y = y + params["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"]), h_fin
+
+
+def ssm_decode_step(params, x, state: SSMState, cfg):
+    """One-token Mamba2 step. x: (B,1,D) → ((B,1,D), new state)."""
+    d_inner, d_state, n_heads = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p_head = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xin, b_mat, c_mat, dt = _split_proj(proj, d_inner, d_state, n_heads)
+
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)  # (B,C)
+    width = params["conv_w"].shape[0]
+    hist = jnp.concatenate([state.conv, conv_in[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = (
+        jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner]
+    b_t = conv_out[..., d_inner : d_inner + d_state]
+    c_t = conv_out[..., d_inner + d_state :]
+
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    xh = xin.reshape(-1, n_heads, p_head)
+    y, h_new = ssd_step(state.h, xh, dtp, a, b_t, c_t)
+    y = y + params["d_skip"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)  # f32 SSD state → act dtype
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z)[:, None, :], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out.astype(x.dtype), SSMState(h=h_new, conv=hist[:, 1:, :])

@@ -1,0 +1,332 @@
+"""Decoder stacks: dense/MoE transformers, SSM (Mamba2), hybrid (Zamba2),
+and encoder-decoder (Whisper) assembly.
+
+All homogeneous per-layer parameters are *stacked on a leading layer axis*
+and driven by `jax.lax.scan` — one traced block regardless of depth, which
+keeps HLO size and compile time flat across the 24–62 layer archs, and
+makes activation rematerialization a single `jax.checkpoint` around the
+block body. Heterogeneity (gemma3 local/global windows, zamba2's periodic
+shared attention) is expressed as *data* (per-layer scalars scanned
+alongside), never as per-layer Python branches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+# ----------------------------------------------------------- layer unroll --
+# cost_analysis() counts a while-loop body ONCE regardless of trip count, so
+# the dry-run compiles every cell twice (unroll=1, unroll=2) and solves
+# total = a + L·b for the true per-step totals. This global sets the scan
+# unroll for all layer stacks (1 everywhere except inside the dry-run).
+_LAYER_UNROLL = 1
+_REMAT_POLICY = "batch_dots"  # batch_dots | dots | everything | off
+_SEQ_PARALLEL = False  # shard the residual stream's seq axis over `model`
+
+
+def set_layer_unroll(n: int) -> None:
+    global _LAYER_UNROLL
+    _LAYER_UNROLL = max(1, int(n))
+
+
+def set_remat_policy(name: str) -> None:
+    global _REMAT_POLICY
+    assert name in ("batch_dots", "dots", "everything", "off"), name
+    _REMAT_POLICY = name
+
+
+def set_seq_parallel(on: bool) -> None:
+    global _SEQ_PARALLEL
+    _SEQ_PARALLEL = bool(on)
+
+
+def _maybe_remat(body, remat: bool):
+    if not remat or _REMAT_POLICY == "off":
+        return body
+    if _REMAT_POLICY == "everything":
+        return jax.checkpoint(body)
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if _REMAT_POLICY == "batch_dots"
+        else jax.checkpoint_policies.checkpoint_dots
+    )
+    return jax.checkpoint(body, policy=policy)
+
+
+def _residual_hint(x):
+    """Megatron-style sequence parallelism: between blocks the residual
+    stream is sharded over `model` on the sequence axis; GSPMD inserts the
+    all-gather before attention and the reduce-scatter after projections,
+    halving all-reduce bytes and cutting pointwise-op traffic TP-fold."""
+    if _SEQ_PARALLEL:
+        return L.shard_hint(x, L.DP, "model", None)
+    return L.shard_hint(x, L.DP, None, None)
+
+
+def _unroll(length: int) -> int:
+    return min(_LAYER_UNROLL, length)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+def _attn_block_init(key, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p = {
+        "ln1": {"scale": jnp.ones((d,), cfg.pdtype)},
+        "attn": A.attn_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_, cfg.pdtype,
+            bias=cfg.qkv_bias,
+        ),
+        "ln2": {"scale": jnp.ones((d,), cfg.pdtype)},
+    }
+    if cfg.n_experts:
+        p["moe"] = M.moe_init(
+            ks[1], d, cfg.d_ff, cfg.n_experts, cfg.pdtype,
+            dense_residual=cfg.moe_dense_residual, f_dense=cfg.d_ff_dense,
+        )
+    else:
+        p["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff, cfg.act, cfg.pdtype)
+    if cross:
+        p["ln_cross"] = {"scale": jnp.ones((d,), cfg.pdtype)}
+        p["cross"] = A.attn_init(
+            ks[2], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_, cfg.pdtype,
+            bias=cfg.qkv_bias,
+        )
+    return p
+
+
+def _ssm_block_init(key, cfg: ModelConfig):
+    return {
+        "ln1": {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)},
+        "ssm": S.ssm_init(
+            key, cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state,
+            cfg.ssm_conv_width, cfg.pdtype,
+        ),
+    }
+
+
+def _stack(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params = {"embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.pdtype)}
+    d = cfg.d_model
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = _stack(
+            ks[1], cfg.n_layers, lambda k: _attn_block_init(k, cfg)
+        )
+    elif cfg.family in ("ssm", "hybrid"):
+        params["blocks"] = _stack(
+            ks[1], cfg.n_layers, lambda k: _ssm_block_init(k, cfg)
+        )
+        if cfg.family == "hybrid":
+            # one full transformer block (attn + MLP), re-applied with the
+            # *same weights* every attn_every layers — Zamba2's shared block
+            params["shared_attn"] = _attn_block_init(ks[2], cfg)
+    elif cfg.family == "audio":  # encoder-decoder
+        params["enc_blocks"] = _stack(
+            ks[1], cfg.encoder_layers, lambda k: _attn_block_init(k, cfg)
+        )
+        params["enc_norm"] = {"scale": jnp.ones((d,), cfg.pdtype)}
+        params["blocks"] = _stack(
+            ks[3], cfg.n_layers, lambda k: _attn_block_init(k, cfg, cross=True)
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embedding_init(
+            ks[4], cfg.vocab_size, cfg.d_model, cfg.pdtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes (training / prefill)
+# ---------------------------------------------------------------------------
+class StackOut(NamedTuple):
+    x: jnp.ndarray
+    aux_loss: jnp.ndarray
+    kv: Optional[tuple]  # (L, B, S, Hkv, hd) ×2 when collect_kv
+
+
+def _attn_stack(params, x, cfg: ModelConfig, *, enc_out=None, positions=None,
+                collect_kv: bool = False, remat: bool = False):
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    is_moe = bool(cfg.n_experts)
+    is_cross = enc_out is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, window = xs
+        res = A.attention(
+            bp["attn"],
+            L.rmsnorm(bp["ln1"], x, cfg.norm_eps),
+            rope_theta=cfg.rope_theta,
+            window=window,
+            causal=True,
+            positions=positions,
+            return_kv=collect_kv,
+        )
+        h, kv = res if collect_kv else (res, None)
+        x = x + h
+        if is_cross:
+            c = A.attention(
+                bp["cross"],
+                L.rmsnorm(bp["ln_cross"], x, cfg.norm_eps),
+                rope_theta=cfg.rope_theta,
+                window=jnp.int32(0),
+                causal=False,
+                x_kv=enc_out,
+            )
+            x = x + c
+        xn = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            y, a = M.moe_apply(
+                bp["moe"], xn, k=cfg.experts_per_token,
+                capacity_factor=cfg.moe_capacity_factor,
+                dense_residual=cfg.moe_dense_residual,
+            )
+            aux = aux + a
+        else:
+            y = L.mlp_apply(bp["mlp"], xn, cfg.act)
+        out = _residual_hint(x + y)
+        return (out, aux), kv
+
+    body = _maybe_remat(body, remat)
+
+    (x, aux), kvs = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], windows),
+        unroll=_unroll(cfg.n_layers),
+    )
+    return StackOut(x, aux, kvs if collect_kv else None)
+
+
+def _ssm_stack(params, x, cfg: ModelConfig, *, positions=None,
+               collect_kv: bool = False, remat: bool = False):
+    """Mamba2 / Zamba2 stack. Shared attention handled as scanned data: the
+    per-layer flag picks whether the (single, closure-captured) shared
+    attention block contributes before the SSM mixer."""
+    kinds = cfg.layer_kinds()
+    is_attn = jnp.asarray([k == "ssm_attn" for k in kinds], jnp.bool_)
+    shared = params.get("shared_attn")
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, attn_here = xs
+        kv = None
+        if shared is not None:
+            b, s, _ = x.shape
+            kv_shape = (b, s, cfg.n_kv_heads, cfg.head_dim_)
+
+            def with_attn(x):
+                h, (k, v) = A.attention(
+                    shared["attn"],
+                    L.rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                    rope_theta=cfg.rope_theta,
+                    window=jnp.int32(0),
+                    causal=True,
+                    positions=positions,
+                    return_kv=True,
+                )
+                x = x + h
+                y = L.mlp_apply(
+                    shared["mlp"], L.rmsnorm(shared["ln2"], x, cfg.norm_eps), cfg.act
+                )
+                return x + y, k, v
+
+            def without_attn(x):
+                z = jnp.zeros(kv_shape, x.dtype)
+                return x, z, z
+
+            x, k, v = jax.lax.cond(attn_here, with_attn, without_attn, x)
+            if collect_kv:
+                kv = (k, v)
+        y, _ = S.ssm_block(bp["ssm"], L.rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+        return (x + y, aux), kv
+
+    body = _maybe_remat(body, remat)
+
+    (x, aux), kvs = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], is_attn),
+        unroll=_unroll(cfg.n_layers),
+    )
+    return StackOut(x, aux, kvs if collect_kv else None)
+
+
+def encoder_forward(params, frames, cfg: ModelConfig):
+    """Whisper-style encoder over precomputed (stub) frame embeddings."""
+
+    def body(x, bp):
+        h = A.attention(
+            bp["attn"],
+            L.rmsnorm(bp["ln1"], x, cfg.norm_eps),
+            rope_theta=cfg.rope_theta,
+            window=jnp.int32(0),
+            causal=False,
+        )
+        x = x + h
+        y = L.mlp_apply(bp["mlp"], L.rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg.act)
+        return x + y, None
+
+    x, _ = jax.lax.scan(
+        body, frames, params["enc_blocks"], unroll=_unroll(cfg.encoder_layers)
+    )
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = False):
+    """Training forward: returns (logits, aux_loss).
+
+    batch: {"tokens": (B,S)} plus family extras:
+      vlm:   {"patches": (B,P,D)} — prepended to the token embeddings
+      audio: {"frames": (B,T,D)} — encoder input (stub conv frontend)
+    """
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.cdtype)
+    x = L.shard_hint(x, L.DP, None, None)
+    positions = None
+    enc_out = None
+
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.cdtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encoder_forward(params, batch["frames"].astype(cfg.cdtype), cfg)
+
+    if cfg.family in ("ssm", "hybrid"):
+        out = _ssm_stack(params, x, cfg, remat=remat)
+    else:
+        out = _attn_stack(params, x, cfg, enc_out=enc_out, remat=remat)
+
+    h = L.rmsnorm(params["final_norm"], out.x, cfg.norm_eps)
+    if cfg.family == "vlm":  # only text positions produce logits
+        h = h[:, batch["patches"].shape[1] :, :]
+    table = (
+        params["embed"]["table"]
+        if cfg.tie_embeddings
+        else params["unembed"]["table"]
+    )
+    # logits stay in activation dtype: a (B, S, V) f32 copy of a 262k-vocab
+    # model would dominate HBM; the loss upcasts inside fused reductions.
+    logits = jnp.einsum("bsd,vd->bsv", h, table.astype(h.dtype))
+    logits = L.shard_hint(logits, L.DP, None, "model")
+    return logits, out.aux_loss

@@ -1,0 +1,106 @@
+"""Training step: loss, gradients, optimizer update, optional gradient
+compression hook. One jit-able function parameterized by (model, opt cfg).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    remat: bool = True
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01  # MoE load-balance
+    grad_compression: str = "none"  # none | int8  (error-feedback int8)
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.AdamWState
+    ef: Optional[dict]  # error-feedback residuals (grad compression)
+
+
+def init_state(model: Model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    ef = None
+    if tcfg.grad_compression == "int8":
+        ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt.init(params), ef=ef)
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token-mean CE with optional z-loss. labels < 0 are masked out.
+
+    The gold-logit gather is a one-hot contraction (not take_along_axis):
+    it fuses into a sharded reduction when the vocab axis is
+    tensor-parallel, instead of all-gathering (B, S, V).
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = labels[..., None] == jnp.arange(vocab, dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    ce = (logz - gold) * mask
+    total = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce) / total
+    if z_loss:
+        loss = loss + z_loss * jnp.sum((logz * mask) ** 2) / total
+    return loss
+
+
+def loss_fn(params, batch, model: Model, tcfg: TrainConfig):
+    logits, aux = model.forward(params, batch, remat=tcfg.remat)
+    loss = cross_entropy(logits, batch["labels"], tcfg.z_loss)
+    if model.cfg.n_experts:
+        loss = loss + tcfg.aux_loss_weight * aux
+    return loss, {"ce": loss, "aux": aux}
+
+
+def _compress_int8(grads, ef):
+    """Error-feedback int8 compression of the gradient all-reduce payload.
+
+    Simulates: q = round(g+e / s) clipped to int8; residual e' = (g+e) - s*q.
+    The all-reduce then moves 1/4 the bytes (int8 vs f32). On the roofline
+    this divides the gradient-sync collective term by 4; convergence is
+    preserved by the error feedback (tested).
+    """
+    def comp(g, e):
+        x = g.astype(jnp.float32) + e
+        s = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(x / s), -127, 127)
+        deq = (q * s).astype(g.dtype)
+        return deq, x - q * s
+
+    flat = jax.tree.map(comp, grads, ef)
+    g = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    e = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return g, e
+
+
+def train_step(state: TrainState, batch, model: Model, tcfg: TrainConfig):
+    """Pure function: (state, batch) → (state, metrics). Shard with pjit."""
+    (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params, batch, model, tcfg
+    )
+    ef = state.ef
+    if tcfg.grad_compression == "int8":
+        grads, ef = _compress_int8(grads, ef)
+    params, opt_state, om = opt.apply(tcfg.adamw, state.params, grads, state.opt)
+    metrics = {"loss": loss, **parts, **om}
+    return TrainState(params=params, opt=opt_state, ef=ef), metrics
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    return functools.partial(train_step, model=model, tcfg=tcfg)

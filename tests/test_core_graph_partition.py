@@ -1,0 +1,116 @@
+"""Unit + property tests: graph representation and CPP partitioning."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, cut_value, cut_value_batch, subgraph
+from repro.core.partition import (
+    alg1_ranges,
+    balanced_ranges,
+    connectivity_preserving_partition,
+    partition_for_solver,
+    random_partition,
+)
+
+
+def test_graph_from_edges_padding():
+    g = Graph.from_edges(4, [(0, 1), (1, 2)], pad_to=5)
+    assert g.edges.shape == (5, 2)
+    assert g.n_edges == 2
+    assert float(g.total_weight()) == 2.0
+
+
+def test_cut_value_simple():
+    # triangle: best cut = 2
+    g = Graph.from_edges(3, [(0, 1), (1, 2), (0, 2)])
+    assert float(cut_value(g, jnp.array([0, 1, 0]))) == 2.0
+    assert float(cut_value(g, jnp.array([0, 0, 0]))) == 0.0
+    assert float(cut_value(g, jnp.array([1, 1, 1]))) == 0.0
+
+
+def test_cut_value_batch_matches_single():
+    g = Graph.erdos_renyi(12, 0.5, seed=0)
+    rng = np.random.default_rng(0)
+    batch = rng.integers(0, 2, size=(7, 12))
+    vb = np.asarray(cut_value_batch(g, jnp.asarray(batch)))
+    for i in range(7):
+        assert vb[i] == pytest.approx(float(cut_value(g, jnp.asarray(batch[i]))))
+
+
+def test_padding_edges_never_contribute():
+    g1 = Graph.from_edges(4, [(0, 1)], pad_to=1)
+    g2 = Graph.from_edges(4, [(0, 1)], pad_to=64)
+    a = jnp.array([1, 0, 1, 0])
+    assert float(cut_value(g1, a)) == float(cut_value(g2, a))
+
+
+@given(
+    n=st.integers(6, 60),
+    m=st.integers(2, 6),
+)
+@settings(max_examples=40, deadline=None)
+def test_balanced_ranges_properties(n, m):
+    if n // m < 2:
+        return
+    ranges = balanced_ranges(n, m)
+    assert len(ranges) == m
+    assert ranges[0][0] == 0 and ranges[-1][1] == n
+    sizes = [hi - lo for lo, hi in ranges]
+    # adjacent ranges share exactly one vertex
+    for (l0, h0), (l1, h1) in zip(ranges, ranges[1:]):
+        assert l1 == h0 - 1
+    # sizes differ by at most 1
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_alg1_ranges_paper_example_overflow():
+    # documents the verbatim-Alg.1 defect: |V|=400, M=16 → last partition 40
+    ranges = alg1_ranges(400, 16)
+    sizes = [hi - lo for lo, hi in ranges]
+    assert sizes[-1] == 40  # violates the 26-qubit cap the paper assumes
+    bsizes = [hi - lo for lo, hi in balanced_ranges(400, 16)]
+    assert max(bsizes) <= 27
+
+
+@given(n=st.integers(10, 80), p=st.floats(0.1, 0.9), m=st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_partition_covers_every_edge_exactly_once(n, p, m):
+    if n // m < 2:
+        return
+    g = Graph.erdos_renyi(n, p, seed=42)
+    part = connectivity_preserving_partition(g, m)
+    total_sub = sum(sg.n_edges for sg in part.subgraphs)
+    assert total_sub + part.inter_edges.shape[0] == g.n_edges
+    # every subgraph respects its range width
+    for sg, (lo, hi) in zip(part.subgraphs, part.ranges):
+        assert sg.n == hi - lo
+        e = np.asarray(sg.edges)[: sg.n_edges]
+        if e.size:
+            assert e.min() >= 0 and e.max() < sg.n
+
+
+def test_partition_for_solver_respects_qubit_cap():
+    for n in (50, 100, 257, 400, 1001):
+        g = Graph.erdos_renyi(n, 0.3, seed=1)
+        part = partition_for_solver(g, 26)
+        assert max(part.sizes) <= 26
+        assert part.m >= int(np.ceil(n / 25))
+
+
+def test_subgraph_extraction():
+    g = Graph.from_edges(6, [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5)])
+    sg = subgraph(g, 1, 4)  # vertices 1,2,3 → edges (1,2),(2,3) relabelled
+    assert sg.n == 3
+    assert sg.n_edges == 2
+
+
+def test_random_partition_preserves_cut_distribution():
+    g = Graph.erdos_renyi(30, 0.4, seed=3)
+    part = random_partition(g, 3, seed=7)
+    # relabelled graph has the same edge count and weights
+    assert part.graph.n_edges == g.n_edges
+    assert float(part.graph.total_weight()) == pytest.approx(
+        float(g.total_weight())
+    )

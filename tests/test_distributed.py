@@ -1,0 +1,45 @@
+"""Multi-device (8 fake CPU devices) equivalence tests, run in subprocesses
+so the main pytest process keeps its single-device view."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_check(name: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core._dist_checks", name],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"{name} failed:\n{out.stdout}\n{out.stderr}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_solve_pool_matches_single_device():
+    res = _run_check("solve_pool")
+    assert res["bitstrings_equal"], res
+    assert res["exp_close"], res
+
+
+def test_sharded_statevector_matches_single_device():
+    res = _run_check("sharded_qaoa")
+    for key, ok in res.items():
+        assert ok, f"{key}: {res}"
+
+
+def test_merge_sharded_matches_exact():
+    res = _run_check("merge_sharded")
+    assert res["val_matches_exact"], res
+    assert res["assignment_achieves_val"], res

@@ -1,0 +1,186 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs ref.py oracles,
+swept across shapes, plus hypothesis property tests on kernel invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph
+from repro.kernels import cutbatch, cutvals, mixer, phase, ref
+
+
+def _graph(n, p, seed, pad=None):
+    return Graph.erdos_renyi(n, p, seed=seed, pad_to=pad)
+
+
+# ---------------------------------------------------------------- cutvals --
+@pytest.mark.parametrize("n", [3, 6, 10, 12])
+@pytest.mark.parametrize("p", [0.2, 0.8])
+def test_cutvals_kernel_matches_ref(n, p):
+    g = _graph(n, p, seed=n)
+    want = ref.cutvals(n, g.edges, g.weights)
+    got = cutvals.cutvals(n, g.edges, g.weights, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_cutvals_kernel_edge_padding_boundary():
+    # weighted multigraph with E > EDGE_CHUNK: exercises chunked accumulation
+    n = 10
+    e = cutvals.EDGE_CHUNK + 37
+    rng = np.random.default_rng(0)
+    pairs = rng.integers(0, n, size=(e, 2))
+    pairs[pairs[:, 0] == pairs[:, 1], 1] += 1
+    pairs[:, 1] %= n
+    w = rng.uniform(0.1, 2.0, size=e).astype(np.float32)
+    g = Graph.from_edges(n, pairs, w)
+    assert g.n_edges > cutvals.EDGE_CHUNK
+    want = ref.cutvals(n, g.edges, g.weights)
+    got = cutvals.cutvals(n, g.edges, g.weights, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@given(n=st.integers(2, 9), seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_cutvals_complement_symmetry(n, seed):
+    # cut(b) == cut(~b): flipping every vertex preserves the cut
+    g = _graph(n, 0.5, seed=seed)
+    c = np.asarray(cutvals.cutvals(n, g.edges, g.weights, interpret=True))
+    np.testing.assert_allclose(c, c[::-1][np.argsort(np.argsort(c))] * 0 + c[(2**n - 1) - np.arange(2**n)], rtol=1e-6)
+
+
+# ------------------------------------------------------------------ phase --
+@pytest.mark.parametrize("n", [6, 10, 14])
+@pytest.mark.parametrize("gamma", [0.0, 0.37, -1.2])
+def test_phase_kernel_matches_ref(n, gamma):
+    key = jax.random.PRNGKey(n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dim = 2**n
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    c = jax.random.uniform(k3, (dim,), jnp.float32) * 10
+    wr, wi = ref.apply_phase(re, im, c, gamma)
+    gr, gi = phase.apply_phase(re, im, c, gamma, interpret=True)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=1e-5)
+
+
+def test_phase_preserves_norm():
+    dim = 2**12
+    key = jax.random.PRNGKey(0)
+    re = jax.random.normal(key, (dim,), jnp.float32)
+    im = jnp.zeros((dim,))
+    c = jax.random.uniform(key, (dim,)) * 5
+    gr, gi = phase.apply_phase(re, im, c, 0.7, interpret=True)
+    np.testing.assert_allclose(
+        float(jnp.sum(gr**2 + gi**2)), float(jnp.sum(re**2)), rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n", [6, 12])
+def test_expectation_kernel_matches_ref(n):
+    key = jax.random.PRNGKey(n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dim = 2**n
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    c = jax.random.uniform(k3, (dim,), jnp.float32)
+    want = float(ref.expectation(re, im, c))
+    got = float(phase.expectation(re, im, c, interpret=True))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+# ------------------------------------------------------------------ mixer --
+@pytest.mark.parametrize("n", [3, 5, 8, 10])
+@pytest.mark.parametrize("beta", [0.1, 0.9, 2.5])
+def test_mixer_kernel_matches_ref(n, beta):
+    key = jax.random.PRNGKey(n)
+    k1, k2 = jax.random.split(key)
+    dim = 2**n
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    wr, wi = ref.apply_mixer(re, im, n, jnp.float32(beta))
+    gr, gi = mixer.apply_mixer(re, im, n, jnp.float32(beta), interpret=True)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-5)
+
+
+@pytest.mark.parametrize("group", [2, 4, 7])
+def test_mixer_group_sizes_agree(group):
+    n = 8
+    key = jax.random.PRNGKey(1)
+    dim = 2**n
+    re = jax.random.normal(key, (dim,), jnp.float32)
+    im = jnp.zeros((dim,))
+    w7r, w7i = ref.apply_mixer(re, im, n, 0.4, group=7)
+    wgr, wgi = ref.apply_mixer(re, im, n, 0.4, group=group)
+    np.testing.assert_allclose(np.asarray(wgr), np.asarray(w7r), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(wgi), np.asarray(w7i), atol=2e-5)
+
+
+def test_mixer_unitarity():
+    n = 9
+    key = jax.random.PRNGKey(2)
+    k1, k2 = jax.random.split(key)
+    re = jax.random.normal(k1, (2**n,), jnp.float32)
+    im = jax.random.normal(k2, (2**n,), jnp.float32)
+    norm0 = float(jnp.sum(re**2 + im**2))
+    gr, gi = mixer.apply_mixer(re, im, n, 1.3, interpret=True)
+    assert float(jnp.sum(gr**2 + gi**2)) == pytest.approx(norm0, rel=1e-4)
+
+
+def test_mixer_beta_zero_is_identity():
+    n = 6
+    re = jax.random.normal(jax.random.PRNGKey(3), (2**n,), jnp.float32)
+    im = jnp.zeros((2**n,))
+    gr, gi = mixer.apply_mixer(re, im, n, 0.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(re), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gi), 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------- cutbatch --
+@pytest.mark.parametrize("b,v", [(4, 10), (130, 50), (64, 600)])
+def test_cutbatch_kernel_matches_ref(b, v):
+    g = _graph(v, 0.3, seed=b)
+    adj = g.dense_adjacency()
+    rng = np.random.default_rng(b)
+    spins = (rng.integers(0, 2, size=(b, v)) * 2 - 1).astype(np.float32)
+    want = ref.cut_batch_dense(jnp.asarray(spins), adj, g.total_weight())
+    got = cutbatch.cut_batch_dense(
+        jnp.asarray(spins), adj, g.total_weight(), interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_cutbatch_agrees_with_edge_list_eval():
+    from repro.core.graph import cut_value_batch
+
+    v, b = 37, 12
+    g = _graph(v, 0.5, seed=5)
+    rng = np.random.default_rng(7)
+    assign = rng.integers(0, 2, size=(b, v)).astype(np.int8)
+    spins = (assign * 2 - 1).astype(np.float32)
+    want = np.asarray(cut_value_batch(g, jnp.asarray(assign)))
+    got = np.asarray(
+        cutbatch.cut_batch_dense(
+            jnp.asarray(spins), g.dense_adjacency(), g.total_weight(), interpret=True
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ------------------------------------------------- ops dispatch integrity --
+def test_ops_dispatch_pallas_interpret_equals_xla():
+    from repro.kernels import ops
+
+    n = 8
+    g = _graph(n, 0.5, seed=0)
+    try:
+        ops.set_implementation("xla")
+        c_x = np.asarray(ops.cutvals(n, g.edges, g.weights))
+        ops.set_implementation("pallas_interpret")
+        c_p = np.asarray(ops.cutvals(n, g.edges, g.weights))
+    finally:
+        ops.set_implementation("auto")
+    np.testing.assert_allclose(c_p, c_x, rtol=1e-6)

@@ -1,0 +1,128 @@
+"""Extra property tests: PEI axioms, config registry integrity, QAOA²
+contraction identity, vmapped kernel dispatch, merge-stripe union."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.core.graph import Graph, cut_value
+from repro.core.pei import approximation_ratio, efficiency_factor, pei
+from repro.kernels import ref
+
+
+# ------------------------------------------------------------------- PEI --
+@given(
+    cut=st.floats(0, 100),
+    opt=st.floats(1, 100),
+    t=st.floats(0, 1e4),
+    tb=st.floats(0, 1e4),
+)
+@settings(max_examples=50, deadline=None)
+def test_pei_bounded_and_monotone(cut, opt, t, tb):
+    v = pei(cut, opt, t, tb)
+    assert 0.0 <= v <= 100.0 * max(cut / opt, 1.0) + 1e-9
+    # better cut → no lower PEI
+    assert pei(cut + 1, opt, t, tb) >= v - 1e-9
+    # slower → no higher PEI
+    assert pei(cut, opt, t + 10, tb) <= v + 1e-9
+
+
+@given(t=st.floats(-1e6, 1e6))
+@settings(max_examples=30, deadline=None)
+def test_efficiency_factor_sigmoid_properties(t):
+    ef = efficiency_factor(t, 0.0)
+    assert 0.0 <= ef <= 1.0
+    assert efficiency_factor(0.0, 0.0) == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------- configs --
+def test_registry_loads_every_arch():
+    for arch in configs.lm_arch_ids():
+        cfg = configs.get_config(arch)
+        red = configs.get_reduced(arch)
+        assert cfg.n_layers >= red.n_layers
+        assert cfg.name
+        # published sizes spot-check
+    assert configs.get_config("qwen1.5-0.5b").vocab_size == 151_936
+    assert configs.get_config("gemma3-27b").n_layers == 62
+    assert configs.get_config("arctic-480b").n_experts == 128
+    assert configs.get_config("mamba2-1.3b").ssm_state == 128
+
+
+def test_paraqaoa_config_taxonomy():
+    cfg = configs.get_config("paraqaoa")
+    # hardware-dependent / tunable parameters of §4.2 are all present
+    assert cfg.n_qubits == 26 and cfg.n_solvers == 256
+    assert cfg.top_k >= 1 and cfg.merge_level >= 1
+
+
+def test_gemma3_layer_pattern_5to1():
+    cfg = configs.get_config("gemma3-4b")
+    w = cfg.layer_windows()
+    globals_ = [i for i, x in enumerate(w) if x == 0]
+    locals_ = [i for i, x in enumerate(w) if x > 0]
+    assert len(locals_) == pytest.approx(5 * len(globals_), abs=5)
+    assert all(x in (0, 1024) for x in w)
+
+
+def test_zamba2_shared_block_cadence():
+    cfg = configs.get_config("zamba2-2.7b")
+    kinds = cfg.layer_kinds()
+    attn_idx = [i for i, k in enumerate(kinds) if k == "ssm_attn"]
+    assert len(attn_idx) == 54 // 6
+    assert all(b - a == 6 for a, b in zip(attn_idx, attn_idx[1:]))
+
+
+# ------------------------------------------------- QAOA² contraction -----
+@given(n=st.integers(10, 24), seed=st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_qaoa2_assignment_achieves_reported_cut(n, seed):
+    from repro.core.baselines.qaoa_in_qaoa import qaoa_in_qaoa
+
+    g = Graph.erdos_renyi(n, 0.5, seed=seed)
+    if g.n_edges == 0:
+        return
+    assignment, val, _ = qaoa_in_qaoa(g, n_qubits=6, opt_steps=8)
+    achieved = float(cut_value(g, jnp.asarray(assignment)))
+    assert achieved == pytest.approx(val)
+
+
+# ------------------------------------------------------- kernels + vmap --
+def test_cutvals_kernel_under_vmap():
+    """The solver pool vmaps over subgraphs; the Pallas kernel must batch."""
+    from repro.kernels import cutvals as K
+
+    n = 6
+    gs = [Graph.erdos_renyi(n, 0.6, seed=s, pad_to=32) for s in range(3)]
+    edges = jnp.stack([g.edges for g in gs])
+    weights = jnp.stack([g.weights for g in gs])
+    got = jax.vmap(lambda e, w: K.cutvals(n, e, w, interpret=True))(edges, weights)
+    want = jnp.stack([ref.cutvals(n, g.edges, g.weights) for g in gs])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------- merge stripe union --
+def test_merge_stripes_cover_everything():
+    """Union of striped shards' frontiers == unsharded frontier result."""
+    from repro.core import merge as mm
+    from repro.core.partition import connectivity_preserving_partition
+
+    g = Graph.erdos_renyi(24, 0.5, seed=3)
+    part = connectivity_preserving_partition(g, 3)
+    rng = np.random.default_rng(0)
+    k = 2
+    cand = rng.integers(0, 2 ** min(part.sizes), size=(part.m, k))
+    plan = mm.build_merge_plan(part, cand, k)
+    full = mm.merge_scan(plan, mm.exact_beam_width(k, part.m))
+    best_striped = max(
+        float(
+            mm.merge_scan(
+                plan, 16, shard_id=jnp.int32(s), n_shards=4, split_level=1
+            ).cut_value
+        )
+        for s in range(4)
+    )
+    assert best_striped == pytest.approx(float(full.cut_value))

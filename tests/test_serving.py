@@ -1,0 +1,60 @@
+"""Serving engine: greedy decode equals argmax teacher-forcing on the full
+forward; eos early-exit; works across architecture families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serving.engine import Engine, ServeConfig
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_0_5b", "mamba2_1_3b", "zamba2_2_7b"])
+def test_greedy_generation_consistent_with_forward(arch):
+    cfg = configs.get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, ServeConfig(max_new_tokens=6))
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    out = engine.generate({"tokens": prompts})
+    assert out.shape == (2, 6)
+
+    # teacher-forced check of the FIRST generated token: the engine's
+    # sample must equal argmax of the full forward at the last prompt pos
+    logits, _ = model.forward(
+        params, {"tokens": prompts, "labels": prompts}
+    )
+    want = np.asarray(jnp.argmax(logits[:, 7], axis=-1))
+    np.testing.assert_array_equal(out[:, 0], want)
+
+
+def test_eos_early_exit():
+    cfg = configs.get_reduced("qwen1_5_0_5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab_size)
+    # pick the actual first greedy token as "eos" → generation stops at once
+    e0 = Engine(model, params, ServeConfig(max_new_tokens=8))
+    first = e0.generate({"tokens": prompts})[:, 0]
+    eos = int(first[0])
+    e1 = Engine(model, params, ServeConfig(max_new_tokens=8, eos_id=eos))
+    out = e1.generate({"tokens": prompts})
+    assert out.shape[1] <= 8
+    assert (out[0] == eos).all() or out.shape[1] < 8
+
+
+def test_temperature_sampling_changes_output():
+    cfg = configs.get_reduced("qwen1_5_0_5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab_size)
+    greedy = Engine(model, params, ServeConfig(max_new_tokens=8)).generate(
+        {"tokens": prompts}
+    )
+    hot = Engine(
+        model, params, ServeConfig(max_new_tokens=8, temperature=5.0, seed=3)
+    ).generate({"tokens": prompts})
+    assert not np.array_equal(greedy, hot)
