@@ -1,13 +1,18 @@
-"""Shared benchmark helpers: consistent graph generation, timing, CSV."""
+"""Shared benchmark helpers: consistent graph generation, timing, CSV and
+BENCH_*.json emission."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.core.graph import Graph
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
 def er_graph(n: int, p: float, seed: int = 0) -> Graph:
@@ -35,3 +40,28 @@ def emit(rows, header=None):
         us = r.get("us_per_call", r.get("runtime_s", 0) * 1e6)
         derived = r.get("derived", "")
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench_json(name: str, rows, out_dir: str = RESULTS_DIR) -> str:
+    """Persist benchmark rows as results/BENCH_<name>.json.
+
+    One file per suite, overwritten on re-run — the committed record of
+    "measured, not just claimed" for perf assertions (e.g. the
+    faithful-vs-alternating collective schedules of sharded_qaoa).
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "suite": name,
+                "jax_version": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "rows": rows,
+            },
+            f,
+            indent=1,
+            default=str,
+        )
+    return path

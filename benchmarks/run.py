@@ -42,6 +42,9 @@ SUITES = {
     ),
     "pei_eval": lambda full: pei_eval.run(),
     "kernel_bench": lambda full: kernel_bench.run(),
+    "sched_bench": lambda full: kernel_bench.run_schedules(
+        n_qubits=16 if full else 14
+    ),
 }
 
 
@@ -51,6 +54,16 @@ def main() -> None:
     ap.add_argument("--only", default=None, choices=list(SUITES) + [None])
     ap.add_argument("--save", default=None, help="write rows to JSON")
     args = ap.parse_args()
+
+    # sched_bench needs a multi-device view; emulate before jax initializes —
+    # but only when it is the *sole* selected suite, because forcing 8
+    # emulated devices distorts the other suites' single-device timings.
+    # In a combined run sched_bench degrades to per-axis skip notes unless
+    # XLA_FLAGS already provides the devices.
+    if args.only == "sched_bench":
+        from repro import compat
+
+        compat.ensure_host_device_count(8)
 
     all_rows = []
     for name, fn in SUITES.items():

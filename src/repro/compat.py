@@ -1,0 +1,176 @@
+"""Version-portability layer for JAX SPMD APIs.
+
+The distributed runtime (core/distributed.py, launch/mesh.py,
+launch/sharding.py) must run unchanged on:
+
+  - stock JAX 0.4.x, where ``shard_map`` lives at
+    ``jax.experimental.shard_map.shard_map`` and takes ``check_rep=``;
+  - new-style JAX (>= 0.6), where it is ``jax.shard_map`` and the kwarg
+    was renamed ``check_vma=``;
+  - a laptop / CI runner with one physical CPU (via
+    ``--xla_force_host_platform_device_count`` host-device emulation) or a
+    real multi-device mesh.
+
+Everything version- or platform-conditional funnels through this module so
+call sites stay clean:
+
+  ``shard_map(f, mesh, in_specs, out_specs, check=False)``
+      Resolved implementation with the check kwarg adapted.
+  ``jit(f, donate_argnums=...)``
+      ``jax.jit`` that drops buffer donation on backends that do not
+      implement it (CPU), avoiding per-call "donation not usable" warnings.
+  ``make_mesh(shape, axis_names)``
+      ``jax.make_mesh`` when present, else mesh_utils + Mesh.
+  ``ensure_host_device_count(n)``
+      Idempotent CPU host-device emulation: appends the XLA flag if the
+      backend is not yet initialized (no-op, with the actual count
+      returned, when it is).
+
+See docs/TESTING.md for the support matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+
+JAX_VERSION: tuple = tuple(int(x) for x in jax.__version__.split(".")[:3])
+
+
+# ------------------------------------------------------------- shard_map --
+def _resolve_shard_map() -> Callable:
+    sm = getattr(jax, "shard_map", None)  # new-style (jax >= 0.6)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm  # 0.4.x
+    return sm
+
+
+_RAW_SHARD_MAP: Callable = _resolve_shard_map()
+
+
+def _check_kwarg_name() -> str | None:
+    """'check_vma' (new), 'check_rep' (0.4.x), or None if neither exists."""
+    try:
+        params = inspect.signature(_RAW_SHARD_MAP).parameters
+    except (TypeError, ValueError):  # builtins / odd wrappers: be permissive
+        return None
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return None
+
+
+_CHECK_KWARG: str | None = _check_kwarg_name()
+
+
+def shard_map(f: Callable, mesh, in_specs, out_specs, *, check: bool = False):
+    """Portable shard_map. ``check`` maps onto check_vma/check_rep.
+
+    The runtime disables replication/VMA checking by default: the merge
+    winner-select and top-k reductions produce values that *are* replicated
+    but that the static checkers of several JAX versions cannot prove so.
+    """
+    kwargs: dict = {}
+    if _CHECK_KWARG is not None:
+        kwargs[_CHECK_KWARG] = check
+    return _RAW_SHARD_MAP(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+# -------------------------------------------------------------------- jit --
+def supports_donation(platform: str | None = None) -> bool:
+    """Buffer donation is implemented on TPU/GPU; CPU silently ignores it
+    and warns per call."""
+    platform = platform or jax.default_backend()
+    return platform in ("tpu", "gpu", "cuda", "rocm")
+
+
+def jit(f: Callable, *, donate_argnums: Sequence[int] = (), **kwargs):
+    """jax.jit that applies ``donate_argnums`` only where donation works."""
+    if donate_argnums and supports_donation():
+        kwargs["donate_argnums"] = tuple(donate_argnums)
+    return jax.jit(f, **kwargs)
+
+
+# ------------------------------------------------------------------- mesh --
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """Portable dense device mesh over the default backend's devices."""
+    mk = getattr(jax, "make_mesh", None)  # jax >= 0.4.35
+    if mk is not None:
+        return mk(tuple(shape), tuple(axis_names))
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    return Mesh(mesh_utils.create_device_mesh(tuple(shape)), tuple(axis_names))
+
+
+def _backend_initialized() -> bool:
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:  # private API moved: assume initialized (conservative)
+        return True
+
+
+_HOST_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_count(n: int) -> int:
+    """Arrange for >= n devices on the host platform (CPU emulation).
+
+    Must run before the first jax backend touch (device queries, array
+    creation). Idempotent; returns the device count that will be (or
+    already is) visible. When the backend is already up with fewer
+    devices, returns that smaller count — callers should size their mesh
+    by the return value or skip.
+    """
+    if _backend_initialized():
+        return len(jax.devices())
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _HOST_COUNT_FLAG in flags:
+        # operator already chose a count: the environment wins
+        return int(flags.split(f"{_HOST_COUNT_FLAG}=")[1].split()[0])
+    os.environ["XLA_FLAGS"] = f"{flags} {_HOST_COUNT_FLAG}={n}".strip()
+    return n
+
+
+def device_count() -> int:
+    return len(jax.devices())
+
+
+def mesh_data_axes(mesh) -> tuple:
+    """All batch-shardable axes present in the mesh, in canonical order."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def mesh_model_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.shape else None
+
+
+# ------------------------------------------------------- program caching --
+_PROGRAM_CACHE_SIZE = 32
+
+
+def cached_program(builder: Callable) -> Callable:
+    """LRU-cache a compiled-program builder keyed on its (hashable) args.
+
+    The per-call ``jax.jit(shard_map(...))`` pattern builds a *new* jit
+    wrapper every call, so every ``solve_pool`` call re-traces and
+    re-compiles — a hidden hot-path cost once the solver pool serves
+    repeated partitions. Builders decorated with this return the same
+    compiled callable for the same static configuration; jit's own cache
+    then handles shape/dtype polymorphism.
+
+    Bounded (not maxsize=None): cache keys include the Mesh, and an
+    elastic job that re-meshes after failures would otherwise pin every
+    historical mesh + compiled executable forever. LRU eviction drops the
+    oldest program (and its jit wrapper) once more than
+    ``_PROGRAM_CACHE_SIZE`` static configurations have been seen.
+    """
+    return functools.lru_cache(maxsize=_PROGRAM_CACHE_SIZE)(builder)

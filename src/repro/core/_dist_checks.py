@@ -9,10 +9,15 @@ from __future__ import annotations
 import json
 import sys
 
+from repro import compat
+
+# standalone-friendly: emulate 8 host devices when run without the test
+# harness's XLA_FLAGS (no-op if the jax backend is already initialized)
+compat.ensure_host_device_count(8)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.core import distributed as dist
 from repro.core import merge as merge_mod
@@ -23,7 +28,7 @@ from repro.kernels import ref
 
 
 def check_solve_pool():
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = compat.make_mesh((8,), ("data",))
     g = Graph.erdos_renyi(60, 0.4, seed=0)
     part = connectivity_preserving_partition(g, 6)
     cfg = qaoa_mod.QAOAConfig(n_qubits=11, p_layers=2, opt_steps=10, top_k=2)
@@ -57,7 +62,7 @@ def check_sharded_qaoa():
     want_v, want_i = jax.lax.top_k(probs, 4)
 
     for axis_size in (4, 8):
-        mesh = jax.make_mesh((axis_size,), ("model",))
+        mesh = compat.make_mesh((axis_size,), ("model",))
         for schedule in ("faithful", "alternating"):
             res = dist.sharded_qaoa(
                 g.edges, g.weights, n, gammas, betas, mesh,
@@ -84,7 +89,7 @@ def check_sharded_qaoa():
 
 
 def check_merge_sharded():
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = compat.make_mesh((8,), ("data",))
     g = Graph.erdos_renyi(32, 0.5, seed=2)
     part = connectivity_preserving_partition(g, 4)
     rng = np.random.default_rng(0)
@@ -105,13 +110,16 @@ def check_merge_sharded():
 
 
 def main():
-    which = sys.argv[1]
-    fn = {
+    checks = {
         "solve_pool": check_solve_pool,
         "sharded_qaoa": check_sharded_qaoa,
         "merge_sharded": check_merge_sharded,
-    }[which]
-    print(json.dumps(fn()))
+    }
+    which = sys.argv[1] if len(sys.argv) > 1 else ""
+    if which not in checks:
+        print(f"usage: python -m repro.core._dist_checks {{{'|'.join(checks)}}}")
+        raise SystemExit(2)
+    print(json.dumps(checks[which]()))
 
 
 if __name__ == "__main__":

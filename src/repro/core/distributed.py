@@ -18,11 +18,17 @@ Three shard_map programs, matching DESIGN.md §2:
      - "alternating": keep the swapped layout between layers and evaluate
        the diagonal cost layer with *relabelled* cut values (1 a2a/layer —
        a diagonal Hamiltonian makes the layout change a pure relabelling).
-       Beyond-paper optimization; see EXPERIMENTS.md §Perf.
+       Beyond-paper optimization; measured by benchmarks/kernel_bench.py
+       `run_schedules` (see EXPERIMENTS.md §Perf).
 
 3. `merge_sharded`    — the merge frontier striped across `data` at the
    paper's starting level L: each shard prunes its own stripe locally (the
    paper's independent DFS workers); a pmax/pmin picks the global winner.
+
+All three go through `repro.compat` (portable shard_map + mesh handling)
+and are *cached compiled programs*: the jitted callable is built once per
+static configuration (config, mesh, axes), not per call, with buffer
+donation on backends that support it.
 """
 
 from __future__ import annotations
@@ -34,8 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
+from repro import compat
 from repro.core import merge as merge_mod
 from repro.core import qaoa as qaoa_mod
 from repro.kernels import ops, ref
@@ -44,6 +50,26 @@ from repro.kernels import ops, ref
 # ---------------------------------------------------------------------------
 # 1. solver-pool data parallelism
 # ---------------------------------------------------------------------------
+@compat.cached_program
+def _solve_pool_program(
+    cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool
+):
+    spec = P(axes)
+
+    def run(e, w, mk):
+        return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
+
+    sharded = compat.shard_map(
+        run,
+        mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=qaoa_mod.QAOAResult(spec, spec, spec, spec, spec),
+    )
+    # donate only when solve_pool owns the (freshly padded) batch arrays —
+    # donating caller-owned arrays would invalidate them behind its back
+    return compat.jit(sharded, donate_argnums=(0, 1, 2) if donate else ())
+
+
 def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
                axes=("data",)):
     """Batched QAOA across the mesh: round-robin subgraphs over devices.
@@ -51,11 +77,12 @@ def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
     Pads the batch to a multiple of the axis size (padding entries are
     empty graphs) and strips the padding on return.
     """
+    axes = tuple(axes)
     total = int(np.prod([mesh.shape[a] for a in axes]))
     m = edges.shape[0]
     m_pad = ((m + total - 1) // total) * total
-    if m_pad != m:
-        pad = m_pad - m
+    pad = m_pad - m
+    if pad:
         edges = jnp.concatenate(
             [edges, jnp.zeros((pad,) + edges.shape[1:], edges.dtype)]
         )
@@ -64,19 +91,11 @@ def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
         )
         masks = jnp.concatenate([masks, jnp.ones((pad,), masks.dtype)])
 
-    spec = P(axes)
-
-    def run(e, w, mk):
-        return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
-
-    sharded = shard_map(
-        run,
-        mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=qaoa_mod.QAOAResult(spec, spec, spec, spec, spec),
-        check_vma=False,
-    )
-    res = jax.jit(sharded)(edges, weights, masks)
+    # normalize the cache key on non-donating backends: donate=True and
+    # donate=False would otherwise compile byte-identical programs twice
+    donate = bool(pad) and compat.supports_donation()
+    program = _solve_pool_program(cfg, mesh, axes, donate)
+    res = program(edges, weights, masks)
     return jax.tree.map(lambda x: x[:m], res)
 
 
@@ -101,26 +120,16 @@ def _mix_bits(re, im, n_local: int, lo_bit: int, nbits: int, beta):
     return re_new.reshape(-1), im_new.reshape(-1)
 
 
-def sharded_qaoa(
-    edges,
-    weights,
+@compat.cached_program
+def _sharded_qaoa_program(
     n: int,
-    gammas,
-    betas,
+    p_layers: int,
     mesh: Mesh,
-    axis: str = "model",
-    top_k: int = 4,
-    schedule: str = "alternating",
-    group: int = 7,
+    axis: str,
+    top_k: int,
+    schedule: str,
+    group: int,
 ):
-    """One n-qubit QAOA circuit with amplitudes sharded over `axis`.
-
-    Layouts: A (row-sharded: device d owns global indices [d·L, (d+1)·L));
-    B (after the qubit-swap all_to_all: device p owns, for every d, the
-    slice [d·L + p·chunk, d·L + (p+1)·chunk)). In layout B the local flat
-    index's high h bits are the *original* high qubits — so a full local
-    mixer still touches each original qubit exactly once per layer.
-    """
     d_ax = mesh.shape[axis]
     h = int(np.log2(d_ax))
     assert 2**h == d_ax, f"axis size {d_ax} must be a power of two"
@@ -129,7 +138,6 @@ def sharded_qaoa(
     chunk = L // d_ax
     assert chunk >= 1, f"statevector too small for the mesh: n={n}, axis={d_ax}"
     log2_chunk = int(np.log2(chunk))
-    p_layers = int(gammas.shape[0])
 
     def local_run(edges, weights, gammas, betas):
         me = jax.lax.axis_index(axis)
@@ -173,41 +181,58 @@ def sharded_qaoa(
         vv, ii = jax.lax.top_k(all_v, top_k)
         return ShardedQAOAResult(all_i[ii], vv, exp)
 
-    run = shard_map(
+    run = compat.shard_map(
         local_run,
-        mesh=mesh,
+        mesh,
         in_specs=(P(), P(), P(), P()),
         out_specs=ShardedQAOAResult(P(), P(), P()),
-        check_vma=False,
     )
-    return jax.jit(run)(edges, weights, gammas, betas)
+    return compat.jit(run)
+
+
+def sharded_qaoa(
+    edges,
+    weights,
+    n: int,
+    gammas,
+    betas,
+    mesh: Mesh,
+    axis: str = "model",
+    top_k: int = 4,
+    schedule: str = "alternating",
+    group: int = 7,
+):
+    """One n-qubit QAOA circuit with amplitudes sharded over `axis`.
+
+    Layouts: A (row-sharded: device d owns global indices [d·L, (d+1)·L));
+    B (after the qubit-swap all_to_all: device p owns, for every d, the
+    slice [d·L + p·chunk, d·L + (p+1)·chunk)). In layout B the local flat
+    index's high h bits are the *original* high qubits — so a full local
+    mixer still touches each original qubit exactly once per layer.
+    """
+    program = _sharded_qaoa_program(
+        n, int(gammas.shape[0]), mesh, axis, top_k, schedule, group
+    )
+    return program(edges, weights, gammas, betas)
 
 
 # ---------------------------------------------------------------------------
 # 3. sharded merge frontier (level-aware workers)
 # ---------------------------------------------------------------------------
-def merge_sharded(
-    plan: merge_mod.MergePlan,
+@compat.cached_program
+def _merge_sharded_program(
+    statics: merge_mod.MergePlanStatics,
     beam_width: int,
     mesh: Mesh,
-    axis: str = "data",
-    split_level: int = 1,
+    axis: str,
+    split_level: int,
 ):
-    """Level-aware merge: frontier striped across `axis` at `split_level`.
-
-    Each shard sweeps its own beam of beam_width rows — the global frontier
-    is n_shards × beam_width (the paper's "2K^L workers ⇒ runtime halves
-    per doubling" regime). Returns (assignment (V,), cut value), replicated.
-    """
     d_ax = mesh.shape[axis]
 
     def local_run(lo, cand_bits, edge_u, edge_v, edge_w):
         me = jax.lax.axis_index(axis)
         local_plan = merge_mod.MergePlan(
-            n_vert=plan.n_vert,
-            n_pad=plan.n_pad,
-            n_max=plan.n_max,
-            k=plan.k,
+            *statics,
             lo=lo,
             cand_bits=cand_bits,
             edge_u=edge_u,
@@ -221,20 +246,31 @@ def merge_sharded(
             n_shards=d_ax,
             split_level=split_level,
         )
-        best = jax.lax.pmax(res.cut_value, axis)
-        rank = jnp.where(res.cut_value >= best, me, jnp.int32(2**30))
-        winner = jax.lax.pmin(rank, axis)
-        mask = (me == winner).astype(res.assignment.dtype)
-        assign = jax.lax.psum(res.assignment * mask, axis)
-        return assign, best
+        return merge_mod.global_winner(res, axis, me)
 
-    run = shard_map(
+    run = compat.shard_map(
         local_run,
-        mesh=mesh,
+        mesh,
         in_specs=(P(), P(), P(), P(), P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
-    return jax.jit(run)(
-        plan.lo, plan.cand_bits, plan.edge_u, plan.edge_v, plan.edge_w
+    return compat.jit(run)
+
+
+def merge_sharded(
+    plan: merge_mod.MergePlan,
+    beam_width: int,
+    mesh: Mesh,
+    axis: str = "data",
+    split_level: int = 1,
+):
+    """Level-aware merge: frontier striped across `axis` at `split_level`.
+
+    Each shard sweeps its own beam of beam_width rows — the global frontier
+    is n_shards × beam_width (the paper's "2K^L workers ⇒ runtime halves
+    per doubling" regime). Returns (assignment (V,), cut value), replicated.
+    """
+    program = _merge_sharded_program(
+        merge_mod.plan_statics(plan), beam_width, mesh, axis, split_level
     )
+    return program(*merge_mod.plan_arrays(plan))

@@ -50,6 +50,25 @@ class MergePlan(NamedTuple):
     edge_w: jnp.ndarray  # (M, E_lv) float32
 
 
+class MergePlanStatics(NamedTuple):
+    """The hashable (shape-defining) half of a MergePlan — the cache key
+    for compiled distributed-merge programs (core/distributed.py)."""
+
+    n_vert: int
+    n_pad: int
+    n_max: int
+    k: int
+
+
+def plan_statics(plan: "MergePlan") -> MergePlanStatics:
+    return MergePlanStatics(plan.n_vert, plan.n_pad, plan.n_max, plan.k)
+
+
+def plan_arrays(plan: "MergePlan") -> tuple:
+    """The traced (device-array) half of a MergePlan, in MergePlan order."""
+    return (plan.lo, plan.cand_bits, plan.edge_u, plan.edge_v, plan.edge_w)
+
+
 class MergeResult(NamedTuple):
     assignment: jnp.ndarray  # (V,) int8 best global assignment
     cut_value: jnp.ndarray  # scalar f32
@@ -247,6 +266,22 @@ def merge_scan(
         beam_assign=beam_assign,
         beam_score=beam_score,
     )
+
+
+def global_winner(res: MergeResult, axis: str, shard_id):
+    """Cross-shard winner selection for a striped merge (inside shard_map).
+
+    pmax picks the best cut value; pmin over shard rank breaks exact ties
+    deterministically (lowest shard wins); a masked psum broadcasts the
+    winner's assignment so the return is replicated on every shard.
+    Returns (assignment (V,), best cut value), both replicated.
+    """
+    best = jax.lax.pmax(res.cut_value, axis)
+    rank = jnp.where(res.cut_value >= best, shard_id, jnp.int32(2**30))
+    winner = jax.lax.pmin(rank, axis)
+    mask = (shard_id == winner).astype(res.assignment.dtype)
+    assign = jax.lax.psum(res.assignment * mask, axis)
+    return assign, best
 
 
 def exact_beam_width(k: int, m: int, cap: int = 1 << 22) -> int:

@@ -1,31 +1,37 @@
 """Production mesh builders.
 
 Defined as functions (never module-level constants) so importing this module
-never touches jax device state — required because the dry-run must set
-XLA_FLAGS before any jax initialization.
+never touches jax device state — required because the dry-run (and the CPU
+host-device emulation in repro.compat) must set XLA_FLAGS before any jax
+initialization. All construction goes through `repro.compat.make_mesh` so
+the same code runs on jax versions with and without `jax.make_mesh`.
 """
 
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 4):
-    """Small mesh for multi-device CPU tests (8 fake devices)."""
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Small mesh for multi-device CPU tests (8 fake devices by default).
+
+    Run under `XLA_FLAGS=--xla_force_host_platform_device_count=8` (or call
+    `compat.ensure_host_device_count(8)` before jax initializes).
+    """
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:
     """All batch-shardable axes present in the mesh."""
-    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return compat.mesh_data_axes(mesh)
 
 
 def model_axis(mesh) -> str:
-    return "model"
+    return compat.mesh_model_axis(mesh) or "model"

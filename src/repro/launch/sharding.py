@@ -30,6 +30,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.models.config import ModelConfig
 
 
@@ -52,7 +53,7 @@ def set_strategy(**kwargs):
 
 
 def _dp(mesh: Mesh):
-    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    axes = compat.mesh_data_axes(mesh)
     return axes if len(axes) > 1 else (axes[0] if axes else None)
 
 
@@ -189,7 +190,7 @@ def params_shardings(abstract_params, cfg: ModelConfig, mesh: Mesh,
                      fsdp: bool = False, fsdp_min_size: int = 1 << 20):
     """fsdp=True: train-style ZeRO-3 sharding over the data axes (skips
     small leaves where gather latency would dominate)."""
-    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    axes = compat.mesh_data_axes(mesh)
 
     def per_leaf(path, leaf):
         keys = tuple(_key_str(k) for k in path)

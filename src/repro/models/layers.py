@@ -92,16 +92,25 @@ def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
 
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
-    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Rotate-half form via jnp.roll with full-width cos/sin tables rather
+    than split+concatenate along hd: slice-then-concatenate on the last
+    axis produces wrong results under GSPMD when hd is sharded (observed
+    on jax 0.4.37 CPU SPMD; see docs/TESTING.md). The roll form is
+    bitwise-identical unsharded and partitions correctly.
+    """
     hd = x.shape[-1]
     freqs = rope_frequencies(hd, theta)  # (hd/2,)
     angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
-    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
-    sin = jnp.sin(angles)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    y1 = x1 * cos - x2 * sin
-    y2 = x2 * cos + x1 * sin
-    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    cos = jnp.tile(jnp.cos(angles), 2)[..., None, :]  # (..., S, 1, hd)
+    sin = jnp.tile(jnp.sin(angles), 2)[..., None, :]
+    sign = jnp.concatenate(
+        [-jnp.ones(hd // 2, jnp.float32), jnp.ones(hd // 2, jnp.float32)]
+    )
+    xf = x.astype(jnp.float32)
+    rot = jnp.roll(xf, hd // 2, axis=-1) * sign  # [-x2, x1]
+    return (xf * cos + rot * sin).astype(x.dtype)
 
 
 # ------------------------------------------------------------------- MLP --

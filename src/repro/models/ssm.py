@@ -101,10 +101,15 @@ def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, h0=None):
 
     # ---- intra-chunk (quadratic-in-Q matmul form) -------------------------
     cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
-    decay = jnp.exp(lc[:, :, :, None, :] - lc[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    seg = lc[:, :, :, None, :] - lc[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
     tri = jnp.tril(jnp.ones((q, q), bool))
+    # mask *inside* the exp: for j > i the log-decay difference is positive
+    # and can exceed ln(f32 max) (≈88.7 already at H=16, Q=8, dt≈0.7), so
+    # exp overflows to inf; masking after the multiply then backprops
+    # 0·inf = NaN through the where. -1e9 underflows to exactly 0.
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e9)
+    decay = jnp.exp(seg)
     m = cb[:, :, :, :, None] * decay * dtc[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
-    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
 
     # ---- chunk summaries and inter-chunk scan -----------------------------

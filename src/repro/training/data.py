@@ -34,11 +34,26 @@ class DataConfig:
 
 
 def synthetic_batch(cfg: ModelConfig, dcfg: DataConfig, step: int):
-    """Batch for one step. Same (seed, step) ⇒ same batch, forever."""
+    """Batch for one step. Same (seed, step) ⇒ same batch, forever.
+
+    Tokens are Zipfian (inverse-CDF of a log-uniform draw), like natural
+    text, not uniform: a uniform stream's next-token CE is irreducibly
+    ln(V), so no optimizer-convergence test could ever observe progress.
+    With a skewed marginal the model's CE drops toward the unigram entropy
+    (≈ ln ln V nats lower) as soon as it learns the frequency bias.
+    """
     key = jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step)
     ks = jax.random.split(key, 4)
     b, s = dcfg.batch, dcfg.seq
-    tokens = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size, jnp.int32)
+    u = jax.random.uniform(ks[0], (b, s), jnp.float32)
+    # (V+1)**u spans [1, V+1), so ids cover the full vocab [0, V-1]
+    # (with V**u the last id would never be emitted and row V-1 of the
+    # embedding would receive no gradient, ever)
+    tokens = jnp.clip(
+        ((cfg.vocab_size + 1.0) ** u).astype(jnp.int32) - 1,
+        0,
+        cfg.vocab_size - 1,
+    )
     # next-token LM objective: labels are tokens shifted left
     labels = jnp.concatenate(
         [tokens[:, 1:], jnp.zeros((b, 1), jnp.int32)], axis=1

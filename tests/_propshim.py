@@ -1,0 +1,128 @@
+"""Minimal hypothesis-compatible shim over seeded random draws.
+
+The tier-1 suite's property tests use a small slice of the Hypothesis API
+(`given`/`settings`/`strategies.integers`/`strategies.floats`). When real
+Hypothesis is installed it is used untouched (see conftest.py); offline,
+this shim substitutes deterministic seeded sampling:
+
+  - every test gets its own RNG seeded from its qualified name, so runs
+    are reproducible and order-independent;
+  - `max_examples` is honored; `deadline` and other settings kwargs are
+    accepted and ignored;
+  - on failure, the falsifying example is attached to the exception args
+    so the pytest report shows the drawn values.
+
+No shrinking, no example database — this is a fallback, not a replacement.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw, desc: str):
+        self._draw = draw
+        self._desc = desc
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self._desc
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: random.Random):
+        # hit the bounds occasionally — the cheapest of hypothesis's edge
+        # biases, and the one these property tests actually rely on
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.1:
+            return hi
+        return rng.uniform(lo, hi)
+
+    return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq), f"sampled_from({seq!r})")
+
+
+class settings:
+    """Decorator form only (matches how the suite uses it)."""
+
+    def __init__(self, max_examples: int = 100, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._propshim_settings = self
+        return fn
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(**strategies_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_propshim_settings", None) or getattr(
+                fn, "_propshim_settings", None
+            )
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.example_from(rng) for k, s in strategies_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    e.args = (
+                        f"falsifying example (propshim): {drawn!r}",
+                    ) + tuple(e.args)
+                    raise
+
+        # tolerate @settings stacked above @given as well as below
+        if hasattr(fn, "_propshim_settings"):
+            wrapper._propshim_settings = fn._propshim_settings
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not see the strategy-filled params (it would look for
+        # fixtures named after them); expose only the remaining ones
+        del wrapper.__dict__["__wrapped__"]
+        remaining = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategies_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+
+    return deco
+
+
+# `from hypothesis import strategies as st` resolves this attribute when the
+# shim module is installed as sys.modules["hypothesis"]
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    booleans=booleans,
+    sampled_from=sampled_from,
+)

@@ -1,0 +1,23 @@
+"""Tier-1 test configuration.
+
+1. Hypothesis fallback: the property tests import `hypothesis`; offline CI
+   images often lack it. Install the vendored shim (tests/_propshim.py)
+   into sys.modules before collection when the real package is missing —
+   real Hypothesis, when installed, is used untouched.
+
+The `slow` marker (subprocess-based multi-device tests, own CI job) is
+registered in pytest.ini.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:  # pragma: no cover - trivially environment-dependent
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _propshim
+
+    sys.modules["hypothesis"] = _propshim
+    sys.modules["hypothesis.strategies"] = _propshim.strategies  # type: ignore

@@ -137,6 +137,33 @@ def test_moe_router_actually_routes():
     assert 0.5 < float(aux) / cfg.n_layers < 4.0
 
 
+def test_ssd_chunked_grads_finite_under_long_decay():
+    """Regression for the mamba2 NaN grad_norm: ssd_chunked used to exp()
+    the *unmasked* upper triangle of the intra-chunk log-decay matrix.
+    With |a|·dt·Q ≳ 89 that overflows f32 to inf; the forward was saved by
+    the tril mask, but backprop through where(tri, inf·cb, 0) turns the
+    masked entries into 0·inf = NaN."""
+    from repro.models import ssm
+
+    key = jax.random.PRNGKey(0)
+    b, s, h, p, n, q = 1, 16, 4, 4, 4, 8
+    x = jax.random.normal(key, (b, s, h, p), jnp.float32)
+    dt = jnp.full((b, s, h), 5.0, jnp.float32)  # worst-case decay range
+    a = -jnp.asarray([1.0, 4.0, 16.0, 64.0])  # |a|·dt·(q-1) up to 2240 ≫ 89
+    b_mat = jax.random.normal(jax.random.PRNGKey(1), (b, s, n), jnp.float32)
+    c_mat = jax.random.normal(jax.random.PRNGKey(2), (b, s, n), jnp.float32)
+
+    def loss(x, dt, b_mat, c_mat):
+        y, h_fin = ssm.ssd_chunked(x, dt, a, b_mat, c_mat, q)
+        return jnp.sum(y.astype(jnp.float32) ** 2) + jnp.sum(h_fin**2)
+
+    val = loss(x, dt, b_mat, c_mat)
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(x, dt, b_mat, c_mat)
+    assert bool(jnp.isfinite(val))
+    for g in grads:
+        assert bool(jnp.all(jnp.isfinite(g))), "NaN/inf gradient in SSD path"
+
+
 def test_param_count_matches_analytic():
     for arch in ("qwen1_5_0_5b", "mamba2_1_3b", "moonshot_v1_16b_a3b"):
         cfg = configs.get_reduced(arch)

@@ -1,0 +1,86 @@
+"""Unit tests for the JAX version-portability layer (repro.compat)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+
+def test_shard_map_resolved():
+    assert callable(compat._RAW_SHARD_MAP)
+    # on every supported version exactly one of the two kwargs exists
+    assert compat._CHECK_KWARG in ("check_vma", "check_rep")
+
+
+def test_shard_map_runs_on_single_device_mesh():
+    mesh = compat.make_mesh((1,), ("data",))
+    f = compat.shard_map(
+        lambda x: x * 2.0, mesh, in_specs=(P(),), out_specs=P()
+    )
+    out = jax.jit(f)(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), [0.0, 2.0, 4.0, 6.0])
+
+
+def test_check_kwarg_adaptation(monkeypatch):
+    """The wrapper must translate `check=` onto whichever kwarg the
+    resolved shard_map exposes — both the new-style and 0.4.x spellings."""
+    seen = {}
+
+    def new_style(f, *, mesh, in_specs, out_specs, check_vma=True):
+        seen.update(check_vma=check_vma)
+        return f
+
+    def old_style(f, *, mesh, in_specs, out_specs, check_rep=True):
+        seen.update(check_rep=check_rep)
+        return f
+
+    for impl, kwarg in ((new_style, "check_vma"), (old_style, "check_rep")):
+        monkeypatch.setattr(compat, "_RAW_SHARD_MAP", impl)
+        assert compat._check_kwarg_name() == kwarg
+        monkeypatch.setattr(compat, "_CHECK_KWARG", kwarg)
+        seen.clear()
+        compat.shard_map(lambda x: x, None, in_specs=(), out_specs=())
+        assert seen == {kwarg: False}
+
+
+def test_make_mesh_axes():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert mesh.shape == {"data": 1, "model": 1}
+    assert compat.mesh_data_axes(mesh) == ("data",)
+    assert compat.mesh_model_axis(mesh) == "model"
+    no_model = compat.make_mesh((1,), ("data",))
+    assert compat.mesh_model_axis(no_model) is None
+
+
+def test_donation_gating():
+    assert compat.supports_donation("tpu")
+    assert compat.supports_donation("gpu")
+    assert not compat.supports_donation("cpu")
+    # jit with donation requested still works on the current backend
+    f = compat.jit(lambda x: x + 1, donate_argnums=(0,))
+    assert float(f(jnp.float32(1.0))) == 2.0
+
+
+def test_ensure_host_device_count_after_init():
+    # backend is initialized by the time tests run: must be a no-op that
+    # reports the real count instead of mutating XLA_FLAGS
+    n = len(jax.devices())
+    assert compat.ensure_host_device_count(64) == n
+
+
+def test_cached_program_builder_called_once():
+    calls = []
+
+    @compat.cached_program
+    def build(key):
+        calls.append(key)
+        return lambda x: x * key
+
+    f1 = build(3)
+    f2 = build(3)
+    assert f1 is f2 and calls == [3]
+    build(4)
+    assert calls == [3, 4]

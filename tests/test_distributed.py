@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-based: own CI job
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -121,6 +121,7 @@ def test_retention_gc(tmp_path):
     assert steps == [3, 4]
 
 
+@pytest.mark.slow
 def test_elastic_remesh_subprocess():
     """Save under a (2,4) mesh, restore under (4,2) and single-device;
     forward results identical. Runs with 8 fake devices in a subprocess."""
