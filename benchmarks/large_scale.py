@@ -2,7 +2,16 @@
 
 CPU-scaled: edge probability lowered so the single-core container handles
 the edge volume; the paper's 16k-vertex headline instance runs end to end
-(see examples/solve_16k.py for the full-size driver)."""
+(see examples/solve_16k.py for the full-size driver).
+
+`run_distributed` (``python benchmarks/large_scale.py --distributed``)
+compares single-device vs pool-parallel *stage* timings on the same
+instances, through the `solve_distributed` pipeline on emulated host
+devices, and persists the comparison as results/BENCH_distributed.json
+(schema: docs/EXPERIMENTS.md). On CPU emulation all shards share one
+physical core, so wall-clock parity — not speedup — is the expected
+outcome; the row's per-stage split is the quantity the paper's Fig. 12
+scales with device count."""
 
 from __future__ import annotations
 
@@ -35,7 +44,75 @@ def run(sizes=(1000, 2000, 4000), p: float = 0.02, seed: int = 0,
     return rows
 
 
+def run_distributed(sizes=(1000, 2000), p: float = 0.02, seed: int = 0,
+                    n_qubits: int = 10, opt_steps: int = 12,
+                    data: int = 2, save: bool = True):
+    """Single-device vs pool-parallel stage timings on the same instances.
+
+    Requires >= `data` devices (real, or CPU host-device emulation — the
+    __main__ entry arranges it). Each instance solves twice with identical
+    configs; the distributed row records mesh/merge metadata so the JSON
+    is self-describing.
+    """
+    from repro import compat
+    from repro.core import solve_distributed
+
+    rows = []
+    cfg_kw = dict(n_qubits=n_qubits, top_k=1, p_layers=2,
+                  opt_steps=opt_steps, beam_width=64)
+    if compat.device_count() < data:
+        print(f"# skip distributed suite: {compat.device_count()} devices "
+              f"< data={data}")
+        return rows
+    mesh_spec = {"data": data}
+    for n in sizes:
+        g = er_graph(n, p, seed=seed)
+        single = solve(g, ParaQAOAConfig(**cfg_kw))
+        dist = solve_distributed(g, ParaQAOAConfig(**cfg_kw), mesh_spec)
+        for label, out in (("single", single), ("pool", dist)):
+            row = {
+                "name": f"dist/{label}_n{n}/p{p}",
+                "runtime_s": out.report.runtime_s,
+                "derived": f"cut={out.cut_value:.0f};m={out.partition.m}",
+                "mode": label,
+                "n": n,
+                "cut": out.cut_value,
+                **{k: v for k, v in out.timings.items()},
+            }
+            if label == "pool":
+                row["mesh"] = out.report.extra["mesh"]
+                row["merge_shards"] = out.report.extra["merge_shards"]
+                row["merge_mode"] = out.report.extra["merge_mode"]
+            rows.append(row)
+        rows.append({
+            "name": f"dist/stage_speedup_n{n}",
+            "runtime_s": 0.0,
+            "derived": (
+                f"solve={single.timings['solve_s'] / max(dist.timings['solve_s'], 1e-9):.3f}x;"
+                f"merge={single.timings['merge_s'] / max(dist.timings['merge_s'], 1e-9):.3f}x;"
+                f"cut_equal={abs(single.cut_value - dist.cut_value) < 0.5}"
+            ),
+            "n": n,
+        })
+    if save and rows:
+        from benchmarks.common import write_bench_json
+
+        path = write_bench_json("distributed", rows)
+        print(f"# wrote {path}")
+    return rows
+
+
 if __name__ == "__main__":
+    import sys
+
     from benchmarks.common import emit
 
-    emit(run())
+    if "--distributed" in sys.argv:
+        # emulation only for the multi-device suite (kernel_bench pattern):
+        # forcing extra host devices would distort single-device timings
+        from repro import compat
+
+        compat.ensure_host_device_count(2)
+        emit(run_distributed())
+    else:
+        emit(run())

@@ -101,8 +101,9 @@ def roofline_table(recs, pod="single"):
     return "\n".join(lines)
 
 
-def write_experiments_md(path="EXPERIMENTS.md"):
-    """Substitute the generated tables into EXPERIMENTS.md placeholders."""
+def write_experiments_md(path="docs/EXPERIMENTS.md"):
+    """Substitute the generated tables into EXPERIMENTS.md placeholders
+    (the §Dry-run / §Roofline sections of docs/EXPERIMENTS.md)."""
     recs = [r for r in load() if not r.get("tag")]
     with open(path) as f:
         text = f.read()

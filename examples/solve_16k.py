@@ -4,29 +4,60 @@ pool → level-aware merge → refinement), with stage timings.
 
   PYTHONPATH=src python examples/solve_16k.py            # 16,000 vertices
   PYTHONPATH=src python examples/solve_16k.py --n 2000   # smaller/faster
+  PYTHONPATH=src python examples/solve_16k.py --n 2000 --mesh data=4
 
 The paper solves 16k vertices in 19 min on 2×RTX4090; this container is a
 single CPU core, so default edge probability is reduced (0.01 ≈ 1.3M
-edges). The code path is identical to the pod-scale one — on TPU the same
-pipeline runs through core/distributed.py (solver pool over `data`,
-statevector over `model`).
+edges). Without ``--mesh`` the pipeline runs single-device. With
+``--mesh data=N[,model=M]`` it runs through the distributed runtime in
+core/distributed.py — the solver pool shard_mapped over `data`,
+oversized subproblems' statevectors over `model`, and the merge frontier
+striped per `--merge` policy (docs/DESIGN.md §2). On a single-CPU host
+the mesh devices are emulated (docs/TESTING.md); on a real accelerator
+mesh the same flags drive the pod-scale layout.
 """
 
 import argparse
 import time
 
-from repro.core import ParaQAOAConfig, solve
+ap = argparse.ArgumentParser(
+    description="ParaQAOA headline instance: >10k-vertex Max-Cut, "
+    "optionally through the distributed mesh runtime."
+)
+ap.add_argument("--n", type=int, default=16_000,
+                help="vertex count (paper headline: 16,000)")
+ap.add_argument("--p", type=float, default=0.01,
+                help="Erdős-Rényi edge probability (CPU-scaled default)")
+ap.add_argument("--qubits", type=int, default=10,
+                help="per-device qubit budget; a model mesh axis lifts it "
+                "by log2(model)")
+ap.add_argument("--k", type=int, default=1,
+                help="top-K candidates kept per subgraph")
+ap.add_argument("--opt-steps", type=int, default=10,
+                help="Adam steps per subgraph QAOA")
+ap.add_argument("--refine", type=int, default=200,
+                help="1-flip local-search sweeps on the merged cut")
+ap.add_argument("--mesh", type=str, default=None, metavar="SPEC",
+                help="device mesh spec, e.g. 'data=4' or 'data=2,model=4' "
+                "— enables the core/distributed.py pipeline (emulated "
+                "devices on a single-CPU host)")
+ap.add_argument("--merge", choices=("auto", "striped", "single"),
+                default="auto", dest="merge_mode",
+                help="distributed merge policy (see solve_maxcut --help)")
+args = ap.parse_args()
+
+mesh_spec = None
+if args.mesh:
+    # parse + arrange device emulation before the first jax backend touch
+    from repro import compat
+    from repro.launch.mesh import mesh_spec_size, parse_mesh_spec
+
+    mesh_spec = parse_mesh_spec(args.mesh)
+    compat.ensure_host_device_count(mesh_spec_size(mesh_spec))
+
+from repro.core import ParaQAOAConfig, solve, solve_distributed
 from repro.core.baselines import local_search
 from repro.core.graph import Graph
-
-ap = argparse.ArgumentParser()
-ap.add_argument("--n", type=int, default=16_000)
-ap.add_argument("--p", type=float, default=0.01)
-ap.add_argument("--qubits", type=int, default=10)
-ap.add_argument("--k", type=int, default=1)
-ap.add_argument("--opt-steps", type=int, default=10)
-ap.add_argument("--refine", type=int, default=200)
-args = ap.parse_args()
 
 t0 = time.time()
 print(f"generating G({args.n}, {args.p}) ...", flush=True)
@@ -37,7 +68,14 @@ cfg = ParaQAOAConfig(
     n_qubits=args.qubits, top_k=args.k, p_layers=2,
     opt_steps=args.opt_steps, beam_width=64, refine_steps=args.refine,
 )
-out = solve(graph, cfg)
+if mesh_spec is not None:
+    out = solve_distributed(graph, cfg, mesh_spec, merge_mode=args.merge_mode)
+    extra = out.report.extra
+    print(f"mesh {extra['mesh']}: {extra['merge_shards']} merge shards "
+          f"({extra['merge_mode']}), "
+          f"{extra['sharded_subproblems']} model-sharded subproblems")
+else:
+    out = solve(graph, cfg)
 print(f"ParaQAOA cut = {out.cut_value:.0f} on {args.n} vertices")
 for stage, t in out.timings.items():
     print(f"  {stage:12s} {t:.1f}s")

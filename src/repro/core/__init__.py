@@ -7,6 +7,7 @@ from repro.core.partition import (
     partition_for_solver,
     random_partition,
 )
+from repro.core.distributed import solve_distributed
 from repro.core.paraqaoa import ParaQAOAConfig, ParaQAOAOutput, solve
 from repro.core.pei import approximation_ratio, efficiency_factor, pei
 
@@ -21,6 +22,7 @@ __all__ = [
     "ParaQAOAConfig",
     "ParaQAOAOutput",
     "solve",
+    "solve_distributed",
     "approximation_ratio",
     "efficiency_factor",
     "pei",

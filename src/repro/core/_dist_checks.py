@@ -103,10 +103,66 @@ def check_merge_sharded():
         cut_value(g, jnp.asarray(np.asarray(assign).reshape(-1)[: g.n]))
     )
     val = float(np.asarray(val).reshape(-1)[0])
-    return {
+    out = {
         "val_matches_exact": bool(abs(val - float(want.cut_value)) < 1e-3),
         "assignment_achieves_val": bool(abs(achieved - val) < 1e-3),
     }
+    # striped_beam_width must yield an exhaustive sweep at every split
+    # level (regression: the pre-split frontier term undercounted, so
+    # split_level >= 2 pruned partial-score rows and lost the optimum)
+    for sl in (1, 2, 3):
+        w = merge_mod.striped_beam_width(k, part.m, 8, sl)
+        _, v = dist.merge_sharded(plan, w, mesh, split_level=sl)
+        v = float(np.asarray(v).reshape(-1)[0])
+        out[f"split{sl}_exact_at_proven_width"] = bool(
+            abs(v - float(want.cut_value)) < 1e-3
+        )
+    return out
+
+
+def check_solve_distributed():
+    """End-to-end `solve_distributed` vs single-device `solve` parity.
+
+    Two regimes (DESIGN.md §2.4):
+      - data-only mesh: identical partition + the same compiled pool
+        program + provably-exhaustive striped merge ⇒ cut values equal;
+      - data+model mesh at opt_steps=0: oversized subgraphs route
+        through the sharded statevector at the same linear-ramp
+        parameters the (lifted-budget) single-device pool uses ⇒ equal.
+    """
+    import dataclasses
+
+    from repro.core import paraqaoa as para_mod
+    from repro.core import distributed as dist_mod
+    from repro.core.partition import partition_for_solver
+
+    g = Graph.erdos_renyi(48, 0.3, seed=7)
+    cfg = para_mod.ParaQAOAConfig(
+        n_qubits=8, top_k=2, p_layers=2, opt_steps=10
+    )
+    want = para_mod.solve(g, cfg)
+    got = dist_mod.solve_distributed(g, cfg, {"data": 4})
+    out = {
+        "pool_cut_matches_single": bool(got.cut_value == want.cut_value),
+        "striped_merge_engaged": bool(got.report.extra["merge_shards"] == 4),
+        "assignments_consistent": bool(
+            float(cut_value(g, jnp.asarray(got.assignment))) == got.cut_value
+        ),
+    }
+
+    cfg0 = dataclasses.replace(cfg, opt_steps=0)
+    part = partition_for_solver(g, 10)  # budget lifted by log2(model)=2
+    want0 = para_mod.solve(
+        g, dataclasses.replace(cfg0, n_qubits=10), partition=part
+    )
+    got0 = dist_mod.solve_distributed(g, cfg0, {"data": 2, "model": 4})
+    out["model_cut_matches_lifted_single"] = bool(
+        got0.cut_value == want0.cut_value
+    )
+    out["model_routed_subproblems"] = bool(
+        got0.report.extra["sharded_subproblems"] > 0
+    )
+    return out
 
 
 def main():
@@ -114,6 +170,7 @@ def main():
         "solve_pool": check_solve_pool,
         "sharded_qaoa": check_sharded_qaoa,
         "merge_sharded": check_merge_sharded,
+        "solve_distributed": check_solve_distributed,
     }
     which = sys.argv[1] if len(sys.argv) > 1 else ""
     if which not in checks:

@@ -1,6 +1,8 @@
 """Distributed execution of ParaQAOA on a device mesh.
 
-Three shard_map programs, matching DESIGN.md §2:
+Three shard_map programs plus the end-to-end orchestrator that wires them
+into one pipeline (`solve_distributed`, DESIGN.md §2.4), matching
+DESIGN.md §2:
 
 1. `solve_pool`       — solver-pool data parallelism: the vmapped subgraph
    batch is sharded across the `data` (and `pod`) axes. This is the paper's
@@ -274,3 +276,207 @@ def merge_sharded(
         merge_mod.plan_statics(plan), beam_width, mesh, axis, split_level
     )
     return program(*merge_mod.plan_arrays(plan))
+
+
+# ---------------------------------------------------------------------------
+# 4. end-to-end orchestrator (DESIGN.md §2.4)
+# ---------------------------------------------------------------------------
+def as_mesh(mesh_spec):
+    """Resolve a Mesh | parsed-spec dict | 'data=2,model=4' string | None."""
+    if mesh_spec is None or isinstance(mesh_spec, Mesh):
+        return mesh_spec
+    from repro.launch import mesh as mesh_mod
+
+    spec = (
+        mesh_mod.parse_mesh_spec(mesh_spec)
+        if isinstance(mesh_spec, str)
+        else dict(mesh_spec)
+    )
+    return mesh_mod.build_mesh(spec)
+
+
+def solve_distributed(
+    graph,
+    cfg,
+    mesh_spec,
+    partition=None,
+    schedule: str = "alternating",
+    split_level: int | None = None,
+    merge_mode: str = "auto",
+):
+    """End-to-end ParaQAOA across a device mesh (paper Fig. 3, SPMD form).
+
+    The single-device `repro.core.solve` stages, each replaced by its
+    shard_map program where the mesh provides the matching axis:
+
+      1. partition on host — with the qubit budget *lifted* to
+         ``cfg.n_qubits + log2(model)`` when a `model` axis is present
+         (the sharded statevector holds what one device cannot);
+      2. subgraphs that fit one device solve as a padded batch through the
+         cached `solve_pool` program over the `data` (and `pod`) axes;
+         oversized subgraphs route one-by-one through `sharded_qaoa` over
+         `model` with `schedule`-selected collectives, at linear-ramp
+         parameters (DESIGN.md §2.2);
+      3. the merge frontier stripes across the `data` axis at
+         ``split_level`` (default: the paper's L knob,
+         ``cfg.merge_level``) via `merge_sharded`; `global_winner`
+         replicates the best assignment.
+         ``merge_mode`` picks the striping policy (see the stage-3 comment
+         below and DESIGN.md §2.3): "auto" stripes only when provably
+         exhaustive so the cut value is identical to single-device
+         `solve`; "striped" always stripes (the paper's independent
+         workers); "single" keeps the merge on one device.
+
+    ``mesh_spec`` is a `jax.sharding.Mesh`, a parsed ``{"data": 2}`` dict,
+    a ``"data=2,model=4"`` CLI string, or None — None (or an empty mesh)
+    falls back to the single-device `solve` unchanged. Returns the same
+    `ParaQAOAOutput` as `solve`.
+    """
+    import time
+
+    from repro.core import paraqaoa as para_mod
+    from repro.core.graph import cut_value
+    from repro.core.partition import partition_for_solver
+
+    mesh = as_mesh(mesh_spec)
+    if mesh is None or not mesh.shape:
+        return para_mod.solve(graph, cfg, partition=partition)
+
+    data_axes = compat.mesh_data_axes(mesh)
+    model_axis = compat.mesh_model_axis(mesh)
+    h = int(np.log2(mesh.shape[model_axis])) if model_axis else 0
+    device_cap = cfg.n_qubits
+    budget = device_cap + h
+
+    t0 = time.perf_counter()
+    # ---- stage 1: host-side partition at the lifted budget ---------------
+    part = partition or partition_for_solver(graph, budget)
+    t_part = time.perf_counter()
+
+    # ---- stage 2: solver pool + oversized-subproblem routing -------------
+    qcfg = cfg.qaoa_config()
+    small = [i for i, s in enumerate(part.sizes) if s <= device_cap]
+    big = [i for i, s in enumerate(part.sizes) if s > device_cap]
+    if big and not model_axis:
+        raise ValueError(
+            f"subgraphs of {max(part.sizes)} qubits exceed the "
+            f"{device_cap}-qubit device cap and the mesh has no `model` axis"
+        )
+
+    bit_indices = np.zeros((part.m, cfg.top_k), dtype=np.int64)
+    if small:
+        edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
+            [part.subgraphs[i] for i in small], device_cap
+        )
+        if data_axes:
+            res = solve_pool(edges, weights, masks, qcfg, mesh, axes=data_axes)
+        else:  # model-only mesh: the pool itself stays single-device
+            res = qaoa_mod.solve_subgraph_batch_program(qcfg)(
+                edges, weights, masks
+            )
+        bit_indices[small] = np.asarray(res.bitstrings)
+    gammas0, betas0 = qaoa_mod.linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
+    for i in big:
+        sub = part.subgraphs[i]
+        res = sharded_qaoa(
+            sub.edges,
+            sub.weights,
+            sub.n,
+            gammas0,
+            betas0,
+            mesh,
+            axis=model_axis,
+            top_k=cfg.top_k,
+            schedule=schedule,
+            group=qcfg.mixer_group,
+        )
+        bit_indices[i] = np.asarray(res.bitstrings).reshape(-1)[: cfg.top_k]
+    t_solve = time.perf_counter()
+
+    # ---- stage 3: merge frontier (striped when the policy allows) --------
+    # "auto":    stripe only when the striped sweep is provably exhaustive
+    #            (no shard ever prunes) — then the cut value is identical
+    #            to the single-device merge on the same candidates;
+    # "striped": always stripe (the paper's independent DFS workers). In
+    #            the beam-pruned regime each shard prunes within its own
+    #            stripe, a *different* heuristic from one global beam —
+    #            often better, but not value-identical to `solve`;
+    # "single":  keep the merge on one device (pool/statevector only).
+    if merge_mode not in ("auto", "striped", "single"):
+        raise ValueError(f"unknown merge_mode {merge_mode!r}")
+    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
+    bw = cfg.beam_width or merge_mod.exact_beam_width(
+        cfg.top_k, part.m, cap=cfg.beam_cap
+    )
+    # merge_sharded stripes over one axis only (the innermost data axis);
+    # a `pod` axis replicates the striped sweep rather than widening it
+    n_shards = int(mesh.shape[data_axes[-1]]) if data_axes else 1
+    sl = min(cfg.merge_level if split_level is None else split_level,
+             part.m - 1)
+    per_shard = None
+    if n_shards > 1 and part.m > 1 and merge_mode != "single":
+        w_exact = merge_mod.striped_beam_width(
+            cfg.top_k, part.m, n_shards, sl, cap=cfg.beam_cap
+        )
+        if w_exact is not None and (cfg.beam_width is None or bw >= 2 * cfg.top_k**part.m):
+            per_shard = w_exact
+        elif merge_mode == "striped":
+            per_shard = max(-(-bw // n_shards), 2 * cfg.top_k)
+    if per_shard is not None:
+        assign, val = merge_sharded(
+            plan, per_shard, mesh, axis=data_axes[-1], split_level=sl
+        )
+        assignment = np.asarray(assign).reshape(-1)[: graph.n]
+        cut = float(np.asarray(val).reshape(-1)[0])
+    else:
+        merged = merge_mod.merge_scan(plan, bw)
+        assignment = np.asarray(merged.assignment)
+        cut = float(merged.cut_value)
+    t_merge = time.perf_counter()
+
+    # ---- optional beyond-paper refinement --------------------------------
+    if cfg.refine_steps > 0:
+        from repro.core.baselines.local_search import refine
+
+        assignment, cut = refine(part.graph, assignment, cfg.refine_steps)
+    t_end = time.perf_counter()
+
+    check = float(cut_value(part.graph, jnp.asarray(assignment)))
+    if cfg.refine_steps == 0:
+        assert abs(check - cut) < 1e-2 * max(1.0, abs(check)), (check, cut)
+    cut = check
+
+    timings = {
+        "partition_s": t_part - t0,
+        "solve_s": t_solve - t_part,
+        "merge_s": t_merge - t_solve,
+        "refine_s": t_end - t_merge,
+        "total_s": t_end - t0,
+    }
+    from repro.core.pei import SolveReport
+
+    report = SolveReport(
+        method="paraqaoa-distributed",
+        n_vertices=graph.n,
+        cut_value=cut,
+        runtime_s=timings["total_s"],
+        extra={
+            "m_subgraphs": part.m,
+            "k": cfg.top_k,
+            "beam": bw,
+            "mesh": dict(mesh.shape),
+            "merge_shards": n_shards if per_shard is not None else 1,
+            "merge_mode": merge_mode,
+            "merge_per_shard_beam": per_shard,
+            "sharded_subproblems": len(big),
+            "schedule": schedule,
+            **timings,
+        },
+    )
+    return para_mod.ParaQAOAOutput(
+        assignment=assignment,
+        cut_value=cut,
+        partition=part,
+        report=report,
+        timings=timings,
+    )

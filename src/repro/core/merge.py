@@ -292,3 +292,29 @@ def exact_beam_width(k: int, m: int, cap: int = 1 << 22) -> int:
         if w > cap:
             return cap
     return max(w, 2 * k)
+
+
+def striped_beam_width(
+    k: int, m: int, n_shards: int, split_level: int, cap: int = 1 << 22
+) -> int | None:
+    """Per-shard frontier width that keeps a striped merge exhaustive.
+
+    A merge striped at ``split_level`` is exact iff no shard ever loses a
+    potential winner: before the split every shard carries the *full*
+    frontier — 2·K^j rows survive the level-j step, so the width must
+    reach 2·K^split — and after the split each shard's stripe grows by K
+    per remaining level. Pruning at the final level is harmless (scores
+    are complete there, so top-w keeps the true maximum), which makes
+    ceil(2·K^split / n_shards) stripe roots an upper bound of the exact
+    post-split requirement.
+    Returns the smallest per-shard width covering both, or None when the
+    exhaustive sweep (global 2·K^M, or the per-shard share) exceeds
+    ``cap`` — the caller should then treat the merge as heuristic.
+    """
+    total = 2 * k**m
+    if total > cap:
+        return None
+    l = min(split_level, m - 1)
+    roots = -(-2 * k**l // n_shards)
+    w = max(roots * k ** (m - 1 - l), 2 * k**l, 2 * k)
+    return w if w <= cap else None

@@ -83,7 +83,7 @@ def solve(
     edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
         part.subgraphs, qcfg.n_qubits
     )
-    result = qaoa_mod.solve_subgraph_batch(edges, weights, masks, qcfg)
+    result = qaoa_mod.solve_subgraph_batch_program(qcfg)(edges, weights, masks)
     bit_indices = np.asarray(result.bitstrings)  # (M, K)
     t_solve = time.perf_counter()
 

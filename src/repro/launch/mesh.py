@@ -1,15 +1,105 @@
-"""Production mesh builders.
+"""Production mesh builders and the `--mesh` CLI spec (DESIGN.md §2.1).
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — required because the dry-run (and the CPU
 host-device emulation in repro.compat) must set XLA_FLAGS before any jax
 initialization. All construction goes through `repro.compat.make_mesh` so
 the same code runs on jax versions with and without `jax.make_mesh`.
+
+The CLI mesh spec is a comma-separated `axis=size` list, e.g.
+``data=8``, ``data=2,model=4``, ``pod=2,data=16,model=16``. Axis names are
+restricted to the runtime's three roles (`pod`/`data`/`model`) and
+normalized to that canonical order regardless of how the flag spells them;
+`model` must be a power of two (the sharded-statevector qubit-swap
+all_to_all of core/distributed.py rotates log2(model) qubits).
 """
 
 from __future__ import annotations
 
 from repro import compat
+
+#: Canonical mesh axis order — every mesh the runtime builds uses a
+#: (sub)tuple of these names, outermost first.
+AXIS_ORDER = ("pod", "data", "model")
+
+
+def parse_mesh_spec(spec: str) -> dict:
+    """Parse ``"data=2,model=4"`` into ``{"data": 2, "model": 4}``.
+
+    Pure string processing (no jax): safe to call before backend init, so
+    drivers can size CPU host-device emulation from the parsed product.
+    Raises ValueError on malformed specs: unknown/duplicate axis names,
+    missing ``=``, non-integer or non-positive sizes, a non-power-of-two
+    `model` axis, or an empty spec.
+    """
+    if not isinstance(spec, str) or not spec.strip():
+        raise ValueError(f"empty mesh spec: {spec!r} (expected e.g. 'data=2,model=4')")
+    axes: dict = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if "=" not in item:
+            raise ValueError(
+                f"malformed mesh spec entry {item!r}: expected 'axis=size'"
+            )
+        name, _, size_s = item.partition("=")
+        name = name.strip()
+        if name not in AXIS_ORDER:
+            raise ValueError(
+                f"unknown mesh axis {name!r}: expected one of {AXIS_ORDER}"
+            )
+        if name in axes:
+            raise ValueError(f"duplicate mesh axis {name!r} in {spec!r}")
+        try:
+            size = int(size_s)
+        except ValueError:
+            raise ValueError(
+                f"mesh axis size must be an integer: {item!r}"
+            ) from None
+        if size < 1:
+            raise ValueError(f"mesh axis size must be >= 1: {item!r}")
+        axes[name] = size
+    if "model" in axes and axes["model"] & (axes["model"] - 1):
+        raise ValueError(
+            f"model axis size must be a power of two (got {axes['model']}): "
+            "the sharded statevector rotates log2(model) qubits per all_to_all"
+        )
+    return {a: axes[a] for a in AXIS_ORDER if a in axes}
+
+
+def mesh_spec_size(spec: dict) -> int:
+    """Total device count a parsed mesh spec requires."""
+    total = 1
+    for s in spec.values():
+        total *= s
+    return total
+
+
+def build_mesh(spec: dict):
+    """Device mesh for a parsed spec, over the first prod(sizes) devices.
+
+    Unlike `compat.make_mesh` (which uses *all* visible devices), this
+    tolerates a backend exposing more devices than the spec asks for —
+    the CLI case where `ensure_host_device_count` found the backend
+    already initialized with a larger emulated count.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    shape = tuple(spec.values())
+    names = tuple(spec.keys())
+    total = mesh_spec_size(spec)
+    devices = jax.devices()
+    if len(devices) < total:
+        raise ValueError(
+            f"mesh spec {spec} needs {total} devices but only "
+            f"{len(devices)} are visible — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={total} "
+            "(or call compat.ensure_host_device_count before jax initializes)"
+        )
+    if len(devices) == total:
+        return compat.make_mesh(shape, names)
+    return Mesh(np.asarray(devices[:total]).reshape(shape), names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

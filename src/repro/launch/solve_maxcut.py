@@ -1,31 +1,97 @@
 """Max-Cut solve driver: the paper's pipeline as a CLI.
 
+Single device:
+
   PYTHONPATH=src python -m repro.launch.solve_maxcut --n 2000 --p 0.05 \
       --qubits 10 --k 2 --compare-gw
+
+Distributed (the paper's pool-parallel architecture; on a laptop/CI the
+mesh is CPU host-device emulation, arranged automatically):
+
+  PYTHONPATH=src python -m repro.launch.solve_maxcut --n 400 --mesh data=2
+  PYTHONPATH=src python -m repro.launch.solve_maxcut --n 400 \
+      --mesh data=2,model=4 --schedule alternating
+
+See docs/DESIGN.md §2 for the mesh axes and README.md for a quickstart.
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.core import ParaQAOAConfig, solve
-from repro.core.graph import Graph
-from repro.core.pei import pei
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.solve_maxcut",
+        description="Solve Max-Cut with the ParaQAOA divide-and-conquer "
+        "pipeline (partition → QAOA solver pool → level-aware merge).",
+    )
+    ap.add_argument("--n", type=int, default=400,
+                    help="vertex count of the Erdős-Rényi instance")
+    ap.add_argument("--p", type=float, default=0.1,
+                    help="Erdős-Rényi edge probability")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="graph-generation seed (runs are seed-stable)")
+    ap.add_argument("--qubits", type=int, default=10,
+                    help="per-device qubit budget N (paper: 26 on GPU); "
+                    "a model mesh axis lifts it to N + log2(model)")
+    ap.add_argument("--k", type=int, default=2,
+                    help="top-K candidates kept per subgraph (paper's K)")
+    ap.add_argument("--layers", type=int, default=3,
+                    help="QAOA circuit depth p")
+    ap.add_argument("--opt-steps", type=int, default=25,
+                    help="Adam steps on <cut>; 0 keeps the linear-ramp init")
+    ap.add_argument("--beam", type=int, default=None,
+                    help="merge frontier width (default: exact 2*K^M, capped)")
+    ap.add_argument("--refine", type=int, default=0,
+                    help="1-flip local-search sweeps on the merged cut "
+                    "(beyond-paper; 0 disables)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="SPEC",
+                    help="device mesh spec, e.g. 'data=2' or 'data=2,model=4' "
+                    "(axes: pod/data/model; model must be a power of two). "
+                    "Omit for the single-device pipeline. On a single-CPU "
+                    "host the devices are emulated (docs/TESTING.md)")
+    ap.add_argument("--schedule", choices=("faithful", "alternating"),
+                    default="alternating",
+                    help="collective schedule for model-axis sharded "
+                    "subproblems: 2 vs 1 all_to_all per layer")
+    ap.add_argument("--merge", choices=("auto", "striped", "single"),
+                    default="auto", dest="merge_mode",
+                    help="distributed merge policy: 'auto' stripes the "
+                    "frontier across data shards only when provably "
+                    "exhaustive (cut identical to the single-device run); "
+                    "'striped' always stripes (the paper's independent "
+                    "workers — may differ in the beam-pruned regime); "
+                    "'single' keeps the merge on one device")
+    ap.add_argument("--compare-gw", action="store_true",
+                    help="also run the Goemans-Williamson baseline and "
+                    "report AR / PEI against it")
+    return ap
 
 
 def run(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=400)
-    ap.add_argument("--p", type=float, default=0.1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--qubits", type=int, default=10)
-    ap.add_argument("--k", type=int, default=2)
-    ap.add_argument("--layers", type=int, default=3)
-    ap.add_argument("--opt-steps", type=int, default=25)
-    ap.add_argument("--beam", type=int, default=None)
-    ap.add_argument("--refine", type=int, default=0)
-    ap.add_argument("--compare-gw", action="store_true")
-    args = ap.parse_args(argv)
+    args = build_parser().parse_args(argv)
+
+    mesh_spec = None
+    if args.mesh:
+        # parse + emulate *before* the first jax backend touch (graph
+        # construction below creates device arrays)
+        from repro import compat
+        from repro.launch.mesh import mesh_spec_size, parse_mesh_spec
+
+        mesh_spec = parse_mesh_spec(args.mesh)
+        need = mesh_spec_size(mesh_spec)
+        have = compat.ensure_host_device_count(need)
+        if have < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices but the jax "
+                f"backend is already up with {have}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}"
+            )
+
+    from repro.core import ParaQAOAConfig, solve, solve_distributed
+    from repro.core.graph import Graph
+    from repro.core.pei import pei
 
     graph = Graph.erdos_renyi(args.n, args.p, seed=args.seed)
     print(f"[maxcut] G({args.n}, {args.p}): {graph.n_edges} edges")
@@ -34,7 +100,18 @@ def run(argv=None):
         opt_steps=args.opt_steps, beam_width=args.beam,
         refine_steps=args.refine,
     )
-    out = solve(graph, cfg)
+    if mesh_spec is not None:
+        out = solve_distributed(
+            graph, cfg, mesh_spec,
+            schedule=args.schedule, merge_mode=args.merge_mode,
+        )
+        extra = out.report.extra
+        print(f"[maxcut] mesh {extra['mesh']}: "
+              f"{extra['merge_shards']} merge shards "
+              f"({extra['merge_mode']}), "
+              f"{extra['sharded_subproblems']} model-sharded subproblems")
+    else:
+        out = solve(graph, cfg)
     print(f"[maxcut] cut = {out.cut_value:.0f}  "
           f"(M={out.partition.m}, K={args.k}, {out.report.runtime_s:.2f}s)")
     for stage, t in out.timings.items():

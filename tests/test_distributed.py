@@ -45,3 +45,12 @@ def test_merge_sharded_matches_exact():
     res = _run_check("merge_sharded")
     assert res["val_matches_exact"], res
     assert res["assignment_achieves_val"], res
+
+
+def test_solve_distributed_matches_single_device():
+    """End-to-end pipeline parity on emulated devices (DESIGN.md §2.4):
+    same cut value as single-device `solve` on a small fixed graph, for
+    both the data-only pool mesh and the data+model routing mesh."""
+    res = _run_check("solve_distributed")
+    for key, ok in res.items():
+        assert ok, f"{key}: {res}"

@@ -1,0 +1,123 @@
+"""Docs integrity: every `DESIGN.md §N` / `EXPERIMENTS.md §Name`-style
+citation in the source tree must resolve to a real section, and every
+intra-repo markdown link must point at an existing file. This is the
+check that keeps docstring citations from dangling again (the repo
+shipped for two PRs citing DESIGN.md sections that did not exist);
+CI runs it in the `docs` job, tier-1 runs it here. Pure text scanning —
+no jax import.
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# where a cited doc name resolves to on disk
+DOC_PATHS = {
+    "DESIGN.md": REPO / "docs" / "DESIGN.md",
+    "EXPERIMENTS.md": REPO / "docs" / "EXPERIMENTS.md",
+    "TESTING.md": REPO / "docs" / "TESTING.md",
+    "README.md": REPO / "README.md",
+    "ROADMAP.md": REPO / "ROADMAP.md",
+}
+
+SOURCE_GLOBS = (
+    "src/**/*.py",
+    "benchmarks/**/*.py",
+    "examples/**/*.py",
+    "tests/**/*.py",
+    "*.md",
+    "docs/*.md",
+)
+
+# "DESIGN.md §2.4", "EXPERIMENTS.md §Perf", "docs/DESIGN.md`'s §2", and
+# the reversed "§4 DESIGN.md" form
+_FWD = re.compile(
+    r"\b(DESIGN|EXPERIMENTS|TESTING|README|ROADMAP)\.md[`')»]*(?:'s)?"
+    r"(?:\s*§([\w.-]+))?"
+)
+_REV = re.compile(r"§([\w.-]+)\s+(?:of\s+)?(?:docs/)?(DESIGN|EXPERIMENTS)\.md")
+# bare perf-item citations like "§Perf C3"
+_PERF_ITEM = re.compile(r"§Perf\s+(C\d+)")
+
+
+def _source_files():
+    for pattern in SOURCE_GLOBS:
+        yield from sorted(REPO.glob(pattern))
+
+
+def _doc_text(name: str) -> str:
+    return DOC_PATHS[name].read_text()
+
+
+def _citations(text: str):
+    """Yield (doc_name, section_or_None) for every doc citation in text."""
+    for m in _FWD.finditer(text):
+        yield f"{m.group(1)}.md", m.group(2)
+    for m in _REV.finditer(text):
+        yield f"{m.group(2)}.md", m.group(1)
+
+
+def test_cited_docs_exist():
+    missing = []
+    for path in _source_files():
+        for doc, _ in _citations(path.read_text()):
+            if not DOC_PATHS[doc].exists():
+                missing.append(f"{path.relative_to(REPO)}: {doc}")
+    assert not missing, f"citations to nonexistent docs: {missing}"
+
+
+def test_cited_sections_exist():
+    dangling = []
+    for path in _source_files():
+        if path == Path(__file__):
+            continue  # this file's own regex examples
+        for doc, section in _citations(path.read_text()):
+            if section is None:
+                continue
+            section = section.rstrip(".-")
+            if f"§{section}" not in _doc_text(doc):
+                dangling.append(
+                    f"{path.relative_to(REPO)}: {doc} §{section}"
+                )
+    assert not dangling, f"dangling section citations: {dangling}"
+
+
+def test_perf_item_citations_exist():
+    """'§Perf C3'-style item citations must match an enumerated item in
+    EXPERIMENTS.md's §Perf list (written as 'C3 — ...')."""
+    perf = _doc_text("EXPERIMENTS.md")
+    dangling = []
+    for path in _source_files():
+        if path == Path(__file__):
+            continue
+        for m in _PERF_ITEM.finditer(path.read_text()):
+            if f"{m.group(1)} —" not in perf:
+                dangling.append(f"{path.relative_to(REPO)}: §Perf {m.group(1)}")
+    assert not dangling, f"dangling §Perf items: {dangling}"
+
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_markdown_links_resolve():
+    broken = []
+    for md in sorted(list(REPO.glob("*.md")) + list(REPO.glob("docs/*.md"))):
+        for m in _MD_LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target_path = (md.parent / target.split("#")[0]).resolve()
+            if not target_path.exists():
+                broken.append(f"{md.relative_to(REPO)}: {target}")
+    assert not broken, f"broken intra-repo links: {broken}"
+
+
+def test_experiments_placeholders_or_tables_present():
+    """benchmarks/report.py --write substitutes these markers; whichever
+    state the doc is in (placeholder or generated tables), the sections
+    it writes into must exist."""
+    text = _doc_text("EXPERIMENTS.md")
+    assert "§Dry-run" in text and "§Roofline" in text
+    assert "<!-- DRYRUN_TABLE -->" in text or "All cells" in text
+    assert "<!-- ROOFLINE_TABLE -->" in text or "scoreboard" in text
