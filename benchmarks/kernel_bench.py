@@ -107,7 +107,7 @@ def run_schedules(
             times[schedule] = t
             a2a = (2 if schedule == "faithful" else 1) * p_layers
             rows.append({
-                "name": f"dist/sched_{schedule}_d{d}",
+                "name": f"schedules/sched_{schedule}_d{d}",
                 "runtime_s": t,
                 "derived": f"a2a_total={a2a}",
                 "n_qubits": n_qubits,
@@ -117,7 +117,7 @@ def run_schedules(
             })
         if len(times) == 2:
             rows.append({
-                "name": f"dist/sched_speedup_d{d}",
+                "name": f"schedules/sched_speedup_d{d}",
                 "runtime_s": 0.0,
                 "derived": (
                     f"alt_vs_faithful={times['faithful'] / times['alternating']:.3f}x"

@@ -71,7 +71,7 @@ def run_distributed(sizes=(1000, 2000), p: float = 0.02, seed: int = 0,
         dist = solve_distributed(g, ParaQAOAConfig(**cfg_kw), mesh_spec)
         for label, out in (("single", single), ("pool", dist)):
             row = {
-                "name": f"dist/{label}_n{n}/p{p}",
+                "name": f"distributed/{label}_n{n}/p{p}",
                 "runtime_s": out.report.runtime_s,
                 "derived": f"cut={out.cut_value:.0f};m={out.partition.m}",
                 "mode": label,
@@ -85,7 +85,7 @@ def run_distributed(sizes=(1000, 2000), p: float = 0.02, seed: int = 0,
                 row["merge_mode"] = out.report.extra["merge_mode"]
             rows.append(row)
         rows.append({
-            "name": f"dist/stage_speedup_n{n}",
+            "name": f"distributed/stage_speedup_n{n}",
             "runtime_s": 0.0,
             "derived": (
                 f"solve={single.timings['solve_s'] / max(dist.timings['solve_s'], 1e-9):.3f}x;"

@@ -1,0 +1,137 @@
+"""Closed-loop load generator for the Max-Cut solve service (DESIGN.md §6).
+
+For each offered load R the same seed-stable request mix (varied sizes,
+a fraction of relabeled repeats) runs twice:
+
+  - **sequential** — one `core.solve` per request with the *same* planner
+    knobs, back to back: the per-invocation baseline, which re-traces a
+    fresh XLA program for every distinct (subgraph count, edge pad) shape;
+  - **batched** — through `SolveService`: cross-request packing into the
+    shape-bucketed cached program, canonical-graph cache on.
+
+Per-request cuts of non-cached batched requests are asserted bit-identical
+to their sequential twins (the §6.1 parity contract). Writes
+`results/BENCH_service.json` (schema: docs/EXPERIMENTS.md): throughput and
+p50/p99 latency per mode and load, speedup, cache-hit and batch-fill
+ratios. `--smoke` is the tiny CI variant (emulated devices are irrelevant
+here — the service is a single-process scheduler).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.core import ParaQAOAConfig, solve
+from repro.core.graph import Graph
+from repro.service import SLA, Planner, ServiceConfig, SolveService
+from repro.service.workload import request_mix
+
+
+def _cfg_from_plan(plan) -> ParaQAOAConfig:
+    kn = plan.knobs
+    return ParaQAOAConfig(
+        n_qubits=kn.n_qubits, top_k=kn.top_k, merge_level=plan.merge_level,
+        p_layers=kn.p_layers, opt_steps=kn.opt_steps,
+        beam_width=kn.beam_width,
+    )
+
+
+def _latency_row(name, mode, load, wall, latencies, **extra):
+    lat = sorted(latencies)
+    p50 = lat[len(lat) // 2]
+    p99 = lat[min(len(lat) - 1, max(int(np.ceil(0.99 * len(lat))) - 1, 0))]
+    tput = load / wall if wall > 0 else 0.0
+    return {
+        "name": name,
+        "runtime_s": wall,
+        "derived": f"throughput={tput:.3f}rps;p50={p50:.3f}s;p99={p99:.3f}s",
+        "mode": mode,
+        "load": load,
+        "throughput_rps": tput,
+        "p50_s": p50,
+        "p99_s": p99,
+        **extra,
+    }
+
+
+def run(loads=(1, 2, 4, 8), n_range=(40, 100), p=0.15, seed=0,
+        repeat_frac=0.25, deadline_s=20.0, batch_slots=16, max_qubits=10,
+        save=True):
+    planner = Planner(max_qubits=max_qubits, batch_slots=batch_slots)
+    sla = SLA(deadline_s=deadline_s)
+
+    # absorb one-time backend/compile noise outside the timed sections
+    warm = Graph.erdos_renyi(n_range[0], p, seed=seed + 999)
+    solve(warm, _cfg_from_plan(planner.plan(warm.n, warm.n_edges, sla)))
+
+    rows = []
+    for load in loads:
+        graphs = request_mix(load, n_range, p, repeat_frac, seed)
+        plans = [planner.plan(g.n, g.n_edges, sla) for g in graphs]
+
+        # ---- sequential per-request baseline -----------------------------
+        seq_lat, seq_out = [], []
+        t0 = time.perf_counter()
+        for g, plan in zip(graphs, plans):
+            ts = time.perf_counter()
+            seq_out.append(solve(g, _cfg_from_plan(plan)))
+            seq_lat.append(time.perf_counter() - ts)
+        seq_wall = time.perf_counter() - t0
+        rows.append(_latency_row(
+            f"service/seq_load{load}", "sequential", load, seq_wall, seq_lat,
+        ))
+
+        # ---- batched service (fresh instance per load point) -------------
+        svc = SolveService(
+            ServiceConfig(batch_slots=batch_slots, max_qubits=max_qubits),
+            planner=planner,
+        )
+        t0 = time.perf_counter()
+        rids = [svc.submit(g, sla) for g in graphs]
+        svc.drain()
+        bat_wall = time.perf_counter() - t0
+        bat_lat = [svc.results[rid].latency_s for rid in rids]
+        rows.append(_latency_row(
+            f"service/batched_load{load}", "batched", load, bat_wall, bat_lat,
+            cache_hit_ratio=round(svc.cache.stats.hit_ratio, 4),
+            fill_ratio=round(svc.stats.fill_ratio, 4),
+            dispatches=svc.stats.dispatches,
+        ))
+
+        # ---- parity + speedup summary ------------------------------------
+        cut_equal = True
+        for rid, solo in zip(rids, seq_out):
+            r = svc.results[rid]
+            if r.cached:
+                continue  # served isomorphic twin; cut checked by the cache
+            cut_equal &= bool(
+                r.cut_value == solo.cut_value
+                and np.array_equal(r.assignment, solo.assignment)
+            )
+        speedup = seq_wall / bat_wall if bat_wall > 0 else float("inf")
+        rows.append({
+            "name": f"service/speedup_load{load}",
+            "runtime_s": 0.0,
+            "derived": f"speedup={speedup:.3f}x;cut_equal={cut_equal}",
+            "load": load,
+            "speedup": speedup,
+            "cut_equal": cut_equal,
+        })
+
+    if save and rows:
+        path = write_bench_json("service", rows)
+        print(f"# wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        emit(run(loads=(1, 4), n_range=(24, 40), p=0.2, deadline_s=10.0,
+                 batch_slots=8, save=False))
+    else:
+        emit(run())

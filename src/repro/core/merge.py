@@ -26,12 +26,14 @@ across the `data` mesh axis (see core/distributed.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import functools
+from typing import Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.graph import Graph
 from repro.core.partition import Partition
 
@@ -161,6 +163,90 @@ def _level_delta(beam_assign, oriented, lo, edge_u, edge_v, edge_w, n_max):
     return crossed @ edge_w  # (W, K)
 
 
+def _seed_frontier(plan: MergePlan, w_width: int):
+    """Level-0 frontier: both orientations of subgraph 1's K candidates
+    (the paper's factor 2), scored on the level-0 edge bucket. Shared by
+    `merge_scan` and the anytime `merge_stream` so both sweeps start from
+    the identical state."""
+    k = plan.k
+    neg = jnp.float32(-1e30)
+    bits0 = plan.cand_bits[0]  # (K, n_max)
+    cands0 = jnp.concatenate([bits0, 1 - bits0], axis=0)  # (2K, n_max)
+    assign0 = jnp.zeros((2 * k, plan.n_pad), dtype=jnp.int8)
+    assign0 = jax.lax.dynamic_update_slice(
+        assign0, cands0, (0, plan.lo[0])
+    )
+    # score the level-0 bucket: prefix is empty, u always "candidate-local"
+    delta0 = _level_delta(
+        assign0,
+        cands0[:, None, :],
+        plan.lo[0],
+        plan.edge_u[0],
+        plan.edge_v[0],
+        plan.edge_w[0],
+        plan.n_max,
+    )[:, 0]
+
+    beam_assign = jnp.zeros((w_width, plan.n_pad), dtype=jnp.int8)
+    beam_score = jnp.full((w_width,), neg, dtype=jnp.float32)
+    rows = min(2 * k, w_width)
+    if 2 * k > w_width:
+        top_v, top_i = jax.lax.top_k(delta0, w_width)
+        beam_assign = assign0[top_i]
+        beam_score = top_v
+    else:
+        beam_assign = beam_assign.at[:rows].set(assign0)
+        beam_score = beam_score.at[:rows].set(delta0)
+    return beam_assign, beam_score
+
+
+def _level_step(
+    carry,
+    xs,
+    *,
+    k: int,
+    n_max: int,
+    w_width: int,
+    stripe: bool = False,
+    n_shards: int = 1,
+    shard_id=None,
+    split_level: int = 1,
+):
+    """One merge level: orient, score, top-W prune, write the window.
+
+    The single source of truth for the merge recurrence — `merge_scan`
+    runs it under `lax.scan`, the service's anytime `merge_stream` runs
+    it level-by-level through one cached jitted program (same shapes at
+    every level, so it compiles exactly once).
+    """
+    neg = jnp.float32(-1e30)
+    beam_assign, beam_score = carry
+    (lo, bits, eu, ev, ew), level = xs
+    # orient candidates to agree with the shared vertex (lo)
+    shared = beam_assign[:, lo]  # (W,)
+    flip = (bits[None, :, 0] ^ shared[:, None]).astype(jnp.int8)  # (W, K)
+    oriented = bits[None, :, :] ^ flip[:, :, None]  # (W, K, n_max)
+
+    delta = _level_delta(beam_assign, oriented, lo, eu, ev, ew, n_max)
+    scores = beam_score[:, None] + delta  # (W, K); -inf rows stay -inf
+    flat = scores.reshape(-1)
+    if stripe:
+        mine = (jnp.arange(flat.shape[0]) % n_shards) == shard_id
+        flat = jnp.where((level == split_level) & ~mine, neg, flat)
+    top_v, top_i = jax.lax.top_k(flat, w_width)
+    w_idx = top_i // k
+    k_idx = top_i % k
+
+    new_assign = beam_assign[w_idx]  # (W, V_pad)
+    picked = oriented[w_idx, k_idx]  # (W, n_max)
+    cur = jax.lax.dynamic_slice(
+        new_assign, (0, lo), (w_width, n_max)
+    )
+    merged = jnp.where(top_v[:, None] > neg / 2, picked, cur)
+    new_assign = jax.lax.dynamic_update_slice(new_assign, merged, (0, lo))
+    return (new_assign, top_v), None
+
+
 def merge_scan(
     plan: MergePlan,
     beam_width: int,
@@ -182,66 +268,23 @@ def merge_scan(
     neg = jnp.float32(-1e30)
     stripe = shard_id is not None and n_shards > 1
 
-    # ---- level 0: both orientations of subgraph 1's candidates ----------
-    bits0 = plan.cand_bits[0]  # (K, n_max)
-    cands0 = jnp.concatenate([bits0, 1 - bits0], axis=0)  # (2K, n_max)
-    assign0 = jnp.zeros((2 * k, plan.n_pad), dtype=jnp.int8)
-    assign0 = jax.lax.dynamic_update_slice(
-        assign0, cands0, (0, plan.lo[0])
-    )
-    # score the level-0 bucket: prefix is empty, u always "candidate-local"
-    delta0 = _level_delta(
-        assign0,
-        cands0[:, None, :],
-        plan.lo[0],
-        plan.edge_u[0],
-        plan.edge_v[0],
-        plan.edge_w[0],
-        n_max,
-    )[:, 0]
-
-    beam_assign = jnp.zeros((w_width, plan.n_pad), dtype=jnp.int8)
-    beam_score = jnp.full((w_width,), neg, dtype=jnp.float32)
-    rows = min(2 * k, w_width)
-    if 2 * k > w_width:
-        top_v, top_i = jax.lax.top_k(delta0, w_width)
-        beam_assign = assign0[top_i]
-        beam_score = top_v
-    else:
-        beam_assign = beam_assign.at[:rows].set(assign0)
-        beam_score = beam_score.at[:rows].set(delta0)
+    beam_assign, beam_score = _seed_frontier(plan, w_width)
 
     if stripe and split_level == 0:
         keep = (jnp.arange(w_width) % n_shards) == shard_id
         beam_score = jnp.where(keep, beam_score, neg)
 
     # ---- levels 1..M-1 ---------------------------------------------------
-    def step(carry, xs):
-        beam_assign, beam_score = carry
-        (lo, bits, eu, ev, ew), level = xs
-        # orient candidates to agree with the shared vertex (lo)
-        shared = beam_assign[:, lo]  # (W,)
-        flip = (bits[None, :, 0] ^ shared[:, None]).astype(jnp.int8)  # (W, K)
-        oriented = bits[None, :, :] ^ flip[:, :, None]  # (W, K, n_max)
-
-        delta = _level_delta(beam_assign, oriented, lo, eu, ev, ew, n_max)
-        scores = beam_score[:, None] + delta  # (W, K); -inf rows stay -inf
-        flat = scores.reshape(-1)
-        if stripe:
-            mine = (jnp.arange(flat.shape[0]) % n_shards) == shard_id
-            flat = jnp.where((level == split_level) & ~mine, neg, flat)
-        top_v, top_i = jax.lax.top_k(flat, w_width)
-        w_idx = top_i // k
-        k_idx = top_i % k
-
-        new_assign = beam_assign[w_idx]  # (W, V_pad)
-        picked = oriented[w_idx, k_idx]  # (W, n_max)
-        cur = jax.lax.dynamic_slice(
-            new_assign, (0, lo), (w_width, n_max)
-        )
-        merged = jnp.where(top_v[:, None] > neg / 2, picked, cur)
-        new_assign = jax.lax.dynamic_update_slice(new_assign, merged, (0, lo))
-        return (new_assign, top_v), None
+    step = functools.partial(
+        _level_step,
+        k=k,
+        n_max=n_max,
+        w_width=w_width,
+        stripe=stripe,
+        n_shards=n_shards,
+        shard_id=shard_id,
+        split_level=split_level,
+    )
 
     if plan.lo.shape[0] > 1:
         m = plan.lo.shape[0]
@@ -266,6 +309,106 @@ def merge_scan(
         beam_assign=beam_assign,
         beam_score=beam_score,
     )
+
+
+class AnytimeSnapshot(NamedTuple):
+    """One anytime-merge update (DESIGN.md §6.4): the best-known *complete*
+    assignment after a merge level, with suffix vertices filled greedily."""
+
+    level: int  # levels merged so far (1..M)
+    n_levels: int  # M
+    cut_value: float  # cut of `assignment` on the full graph
+    assignment: np.ndarray  # (V,) int8 complete assignment
+    is_final: bool  # True on the last level (beam fully merged)
+
+
+@compat.cached_program
+def _stream_step_program(statics: MergePlanStatics, beam_width: int):
+    """One jitted merge level for the anytime stream. Every level of one
+    plan has identical shapes, so this compiles once per (statics, width) —
+    the python-level loop in `merge_stream` costs no retraces."""
+    step = functools.partial(
+        _level_step, k=statics.k, n_max=statics.n_max, w_width=beam_width
+    )
+    return jax.jit(lambda carry, xs: step(carry, xs)[0])
+
+
+def _complete_suffix(plan_host, assign_pad: np.ndarray, level: int) -> np.ndarray:
+    """Fill levels (level+1..M-1) of a partial assignment with each
+    subgraph's top-1 candidate, oriented to agree on the shared vertex —
+    the greedy completion that turns a frontier row into a full cut."""
+    lo, cand_bits, n_max = plan_host
+    a = assign_pad.copy()
+    for j in range(level + 1, lo.shape[0]):
+        bits = cand_bits[j, 0]  # (n_max,) top-1 candidate
+        flip = np.int8(bits[0] ^ a[lo[j]])
+        a[lo[j] : lo[j] + n_max] = bits ^ flip
+    return a
+
+
+def merge_stream(
+    plan: MergePlan, beam_width: int
+) -> Iterator[AnytimeSnapshot]:
+    """Anytime form of `merge_scan`: yield the best-known complete cut
+    after every merge level (DESIGN.md §6.4).
+
+    Runs the *same* `_level_step` recurrence as `merge_scan`, but
+    level-by-level through one cached jitted program instead of one
+    `lax.scan`, so the caller can take an early answer between levels.
+    After level l the best frontier row covers vertices [0, hi_l); the
+    remaining subgraphs are completed greedily with their top-1
+    candidates (oriented at the shared vertex), giving a valid full
+    assignment whose cut is scored from the plan's edge buckets — every
+    graph edge lives in exactly one bucket, so the score is exact.
+    The final snapshot's frontier equals the fully-merged beam.
+    """
+    m = int(plan.lo.shape[0])
+    carry = _seed_frontier(plan, beam_width)
+
+    lo_h = np.asarray(plan.lo)
+    bits_h = np.asarray(plan.cand_bits)
+    eu_h, ev_h, ew_h = (
+        np.asarray(plan.edge_u),
+        np.asarray(plan.edge_v),
+        np.asarray(plan.edge_w),
+    )
+    plan_host = (lo_h, bits_h, plan.n_max)
+
+    def snapshot(carry, level: int) -> AnytimeSnapshot:
+        beam_assign, beam_score = carry
+        best = int(np.argmax(np.asarray(beam_score)))
+        partial = np.asarray(beam_assign[best], dtype=np.int8)
+        full = _complete_suffix(plan_host, partial, level)
+        # exact cut from the level buckets (each edge appears exactly once;
+        # padding rows have u == v and weight 0, contributing nothing)
+        crossed = (full[eu_h] ^ full[ev_h]).astype(np.float32)
+        cut = float(np.sum(crossed * ew_h))
+        return AnytimeSnapshot(
+            level=level + 1,
+            n_levels=m,
+            cut_value=cut,
+            assignment=full[: plan.n_vert],
+            is_final=(level == m - 1),
+        )
+
+    yield snapshot(carry, 0)
+    if m == 1:
+        return
+
+    step = _stream_step_program(plan_statics(plan), beam_width)
+    for l in range(1, m):
+        xs = (
+            (
+                plan.lo[l],
+                plan.cand_bits[l],
+                plan.edge_u[l],
+                plan.edge_v[l],
+                plan.edge_w[l],
+            ),
+            jnp.int32(l),
+        )
+        carry = step(carry, xs)
+        yield snapshot(carry, l)
 
 
 def global_winner(res: MergeResult, axis: str, shard_id):

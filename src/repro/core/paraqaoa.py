@@ -66,6 +66,34 @@ class ParaQAOAOutput:
     timings: dict
 
 
+def merge_inputs(
+    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig
+) -> tuple[merge_mod.MergePlan, int]:
+    """Stage-3 (plan, beam width) derivation, shared by every merge
+    consumer — `merge_candidates` below and the service's anytime stream
+    (DESIGN.md §6.4) — so the beam/cap rules cannot silently diverge."""
+    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
+    bw = cfg.beam_width or merge_mod.exact_beam_width(
+        cfg.top_k, part.m, cap=cfg.beam_cap
+    )
+    return plan, bw
+
+
+def merge_candidates(
+    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig
+) -> tuple[np.ndarray, float, int]:
+    """Stage-3 merge of solved candidates → (assignment, cut, beam width).
+
+    The single merge path shared by `solve` and the serve-side scheduler
+    (`repro.service.scheduler`, DESIGN.md §6.1): running the identical
+    plan/beam computation is what keeps service results bit-identical to
+    solo `solve` runs on the same knobs.
+    """
+    plan, bw = merge_inputs(part, bit_indices, cfg)
+    merged = merge_mod.merge_scan(plan, bw)
+    return np.asarray(merged.assignment), float(merged.cut_value), bw
+
+
 def solve(
     graph: Graph,
     cfg: ParaQAOAConfig = ParaQAOAConfig(),
@@ -88,13 +116,7 @@ def solve(
     t_solve = time.perf_counter()
 
     # ---- stage 3: level-aware parallel merge -----------------------------
-    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
-    bw = cfg.beam_width or merge_mod.exact_beam_width(
-        cfg.top_k, part.m, cap=cfg.beam_cap
-    )
-    merged = merge_mod.merge_scan(plan, bw)
-    assignment = np.asarray(merged.assignment)
-    cut = float(merged.cut_value)
+    assignment, cut, bw = merge_candidates(part, bit_indices, cfg)
     t_merge = time.perf_counter()
 
     # ---- optional beyond-paper refinement --------------------------------

@@ -164,16 +164,27 @@ def index_to_bits(indices: jnp.ndarray, n: int) -> jnp.ndarray:
     return ((indices[..., None] >> shifts) & 1).astype(jnp.int8)
 
 
-def pad_subgraph_arrays(subgraphs, n_qubits: int, e_pad: int | None = None):
-    """Stack per-subgraph (edges, weights, real_mask) into batch arrays."""
+def pad_subgraph_arrays(
+    subgraphs, n_qubits: int, e_pad: int | None = None,
+    n_rows: int | None = None,
+):
+    """Stack per-subgraph (edges, weights, real_mask) into batch arrays.
+
+    ``n_rows`` pads the batch dimension with empty-graph filler rows
+    (mask 1, no edges — the same convention `solve_pool` pads with), the
+    shape-stable packing the serve-side scheduler relies on (one source
+    of truth for the DESIGN.md §6.1 parity contract).
+    """
     import numpy as np
 
     if e_pad is None:
         e_pad = max(max(g.edges.shape[0] for g in subgraphs), 1)
     b = len(subgraphs)
-    edges = np.zeros((b, e_pad, 2), dtype=np.int32)
-    weights = np.zeros((b, e_pad), dtype=np.float32)
-    masks = np.zeros((b,), dtype=np.int32)
+    rows = b if n_rows is None else n_rows
+    assert rows >= b, (rows, b)
+    edges = np.zeros((rows, e_pad, 2), dtype=np.int32)
+    weights = np.zeros((rows, e_pad), dtype=np.float32)
+    masks = np.ones((rows,), dtype=np.int32)
     for i, g in enumerate(subgraphs):
         m = g.edges.shape[0]
         assert m <= e_pad, (m, e_pad)

@@ -2,6 +2,9 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
       --batch 4 --prompt-len 16 --new-tokens 32 --reduced
+
+Reduced (CPU smoke) configs are the default; pass ``--full-size`` for the
+published shapes.
 """
 
 from __future__ import annotations
@@ -17,16 +20,27 @@ from repro.models.model import build_model
 from repro.serving.engine import Engine, ServeConfig
 
 
-def run(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # paired on/off flags (portable argparse.BooleanOptionalAction): the
+    # old `--reduced` was store_true with default=True, which made the
+    # full-size path unreachable from the CLI
+    ap.add_argument("--reduced", dest="reduced", action="store_true",
+                    default=True,
+                    help="CPU smoke-test config (default)")
+    ap.add_argument("--full-size", dest="reduced", action="store_false",
+                    help="published full-size config")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def run(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = (
         configs.get_reduced(args.arch) if args.reduced else configs.get_config(args.arch)

@@ -1,0 +1,39 @@
+"""Max-Cut solve service: cross-request batching, SLA-driven knob
+selection, and a canonical-graph result cache (DESIGN.md §6)."""
+
+from repro.service.cache import CacheStats, ResultCache
+from repro.service.canonical import CanonicalForm, canonical_form, canonical_key
+from repro.service.planner import (
+    SLA,
+    CostModel,
+    KnobPlan,
+    KnobTuple,
+    Planner,
+    quality_score,
+)
+from repro.service.scheduler import (
+    RequestResult,
+    ServiceConfig,
+    ServiceStats,
+    SolveService,
+    edge_capacity,
+)
+
+__all__ = [
+    "CacheStats",
+    "ResultCache",
+    "CanonicalForm",
+    "canonical_form",
+    "canonical_key",
+    "SLA",
+    "CostModel",
+    "KnobPlan",
+    "KnobTuple",
+    "Planner",
+    "quality_score",
+    "RequestResult",
+    "ServiceConfig",
+    "ServiceStats",
+    "SolveService",
+    "edge_capacity",
+]

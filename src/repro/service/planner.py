@@ -1,0 +1,282 @@
+"""SLA-driven knob selection (DESIGN.md §6.2).
+
+The paper's §4.2 parameter taxonomy exposes (K, L, opt_steps, N) as
+per-invocation CLI flags; the service chooses them *per request* from a
+deadline / accuracy target. A small calibrated cost model — per-stage
+coefficients fitted from `results/BENCH_distributed.json`-style stage
+timings — predicts (partition_s, solve_s, merge_s) for every knob tuple in
+a candidate grid; the planner then picks, among the tuples predicted to
+meet the deadline, the cheapest that reaches the accuracy target, else the
+highest-quality one. Because the feasible set only shrinks as the deadline
+tightens and selection maximizes quality within it, a tighter deadline can
+never select a slower-predicted tuple (proved by `tests/test_service.py`).
+
+Quality is a monotone proxy score over the knobs (the paper's Figs. 9-10
+trends: cut quality rises with K, beam/L, N, and optimizer steps), shared
+with the result cache's equal-or-better-quality gate (§6.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class KnobTuple(NamedTuple):
+    """One candidate setting of the paper's §4.2 tunable knobs."""
+
+    n_qubits: int  # N — per-solver qubit budget
+    top_k: int  # K — candidates kept per subgraph
+    opt_steps: int  # Adam steps on <cut>
+    beam_width: int  # merge frontier width (the L knob's work volume)
+    p_layers: int = 2
+
+
+class StageCost(NamedTuple):
+    partition_s: float
+    solve_s: float
+    merge_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.partition_s + self.solve_s + self.merge_s
+
+
+class KnobPlan(NamedTuple):
+    """Planner output: the chosen knobs plus their predictions."""
+
+    knobs: KnobTuple
+    merge_level: int  # L, clamped to the predicted partition depth
+    predicted: StageCost
+    quality: float
+    meets_deadline: bool
+    meets_quality: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SLA:
+    """Per-request service-level objective. `None` means unconstrained."""
+
+    deadline_s: float | None = None
+    target_quality: float | None = None
+
+
+def quality_score(knobs: KnobTuple) -> float:
+    """Monotone accuracy proxy over the knob tuple; higher is better.
+
+    Calibrated ordering, not an AR prediction: each term follows the
+    paper's measured trend direction (K: Fig. 9, beam/L: Fig. 10,
+    N: §4.2, opt_steps: the ansatz optimizer), with diminishing returns
+    via log/ratio shaping.
+    """
+    return (
+        float(knobs.n_qubits)
+        + 2.0 * math.log2(knobs.top_k)
+        + 0.5 * math.log2(knobs.beam_width)
+        + 3.0 * knobs.opt_steps / (knobs.opt_steps + 10.0)
+    )
+
+
+def _subgraph_count(n_vertices: int, n_qubits: int) -> int:
+    if n_vertices <= n_qubits:
+        return 1
+    return math.ceil(n_vertices / (n_qubits - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Per-stage linear coefficients over closed-form work terms.
+
+    partition ~ c_partition · (|E| + |V|)           (host preprocessing)
+    solve     ~ c_solve · M·(T+1)·p·2^N + c_dispatch·ceil(M/B)
+    merge     ~ c_merge · W·K·|E| + c_merge_base·M  (frontier × extensions
+                                                     × edges scored once)
+    """
+
+    c_partition: float = 2.5e-8
+    c_solve: float = 6.0e-8
+    c_dispatch: float = 2.0e-2
+    c_merge: float = 1.2e-8
+    c_merge_base: float = 1.0e-3
+    batch_slots: int = 16
+
+    def predict(
+        self, n_vertices: int, n_edges: int, knobs: KnobTuple
+    ) -> StageCost:
+        m = _subgraph_count(n_vertices, knobs.n_qubits)
+        e = max(n_edges, 1)
+        part = self.c_partition * (e + n_vertices)
+        amp_steps = m * (knobs.opt_steps + 1) * knobs.p_layers * 2**knobs.n_qubits
+        solve = self.c_solve * amp_steps + self.c_dispatch * math.ceil(
+            m / self.batch_slots
+        )
+        merge = self.c_merge * knobs.beam_width * knobs.top_k * e + (
+            self.c_merge_base * m
+        )
+        return StageCost(part, solve, merge)
+
+    @classmethod
+    def fit(
+        cls,
+        rows: Sequence[dict],
+        knobs: KnobTuple,
+        edge_prob: float = 0.02,
+        **overrides,
+    ) -> "CostModel":
+        """Fit coefficients from benchmark stage-timing rows.
+
+        Rows follow the `BENCH_distributed.json` single-device schema:
+        each carries `n`, `partition_s`, `solve_s`, `merge_s` (and `m` when
+        recorded); `knobs` are the settings the suite ran with and
+        `edge_prob` recovers |E| for rows that predate an explicit edge
+        count. Coefficients are the median observed time-per-work-unit, so
+        one outlier row cannot skew the model.
+        """
+        base = cls(**overrides)
+        c_part, c_solve, c_merge = [], [], []
+        for row in rows:
+            if "partition_s" not in row or "n" not in row:
+                continue
+            n = int(row["n"])
+            e = int(row.get("edges") or edge_prob * n * (n - 1) / 2)
+            m = int(row.get("m") or _subgraph_count(n, knobs.n_qubits))
+            c_part.append(row["partition_s"] / max(e + n, 1))
+            amp = m * (knobs.opt_steps + 1) * knobs.p_layers * 2**knobs.n_qubits
+            c_solve.append(
+                max(row["solve_s"] - base.c_dispatch * math.ceil(m / base.batch_slots), 0.0)
+                / max(amp, 1)
+            )
+            c_merge.append(
+                max(row["merge_s"] - base.c_merge_base * m, 0.0)
+                / max(knobs.beam_width * knobs.top_k * e, 1)
+            )
+        if not c_part:
+            return base
+        return dataclasses.replace(
+            base,
+            c_partition=float(np.median(c_part)),
+            c_solve=float(np.median(c_solve)),
+            c_merge=float(np.median(c_merge)),
+        )
+
+    @classmethod
+    def from_bench_file(
+        cls, path: str, knobs: KnobTuple | None = None, **kwargs
+    ) -> "CostModel":
+        """Calibrate from a committed BENCH_*.json; defaults on any miss.
+
+        The shipped calibration source is `results/BENCH_distributed.json`
+        (written by `benchmarks/large_scale.py --distributed` with the
+        knob settings below).
+        """
+        knobs = knobs or KnobTuple(
+            n_qubits=10, top_k=1, opt_steps=12, beam_width=64, p_layers=2
+        )
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            rows = [
+                r for r in payload.get("rows", []) if r.get("mode") == "single"
+            ]
+            return cls.fit(rows, knobs, **kwargs)
+        except (OSError, ValueError, KeyError):
+            return cls(**kwargs)
+
+
+DEFAULT_BENCH_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results",
+    "BENCH_distributed.json",
+)
+
+# the candidate grid: small enough to scan per request, wide enough to
+# span ~3 orders of magnitude in predicted cost
+DEFAULT_GRID: tuple = tuple(
+    KnobTuple(n_qubits=nq, top_k=k, opt_steps=t, beam_width=w)
+    for nq in (6, 8, 10, 12)
+    for k in (1, 2, 4)
+    for t in (4, 12, 30)
+    for w in (32, 128, 512)
+)
+
+
+class Planner:
+    """Maps (graph size, SLA) → the knob tuple the scheduler should run."""
+
+    def __init__(
+        self,
+        cost_model: CostModel | None = None,
+        grid: Sequence[KnobTuple] = DEFAULT_GRID,
+        max_qubits: int | None = None,
+        default_merge_level: int = 2,
+        batch_slots: int | None = None,
+    ):
+        self.cost_model = cost_model or CostModel.from_bench_file(
+            DEFAULT_BENCH_PATH
+        )
+        if batch_slots is not None:
+            # predict dispatch counts for the batch size the scheduler
+            # actually runs, not the model's default
+            self.cost_model = dataclasses.replace(
+                self.cost_model, batch_slots=batch_slots
+            )
+        if max_qubits is not None:
+            grid = [kn for kn in grid if kn.n_qubits <= max_qubits]
+        if not grid:
+            raise ValueError("empty knob grid")
+        self.grid = list(grid)
+        self.default_merge_level = default_merge_level
+
+    def plan(self, n_vertices: int, n_edges: int, sla: SLA = SLA()) -> KnobPlan:
+        """Pick knobs for one request.
+
+        Selection: among tuples predicted to meet the deadline, the
+        cheapest that reaches the accuracy target; if none reaches it,
+        the highest-quality feasible tuple; if nothing fits the deadline
+        at all, the fastest tuple (best effort). Ties break toward lower
+        predicted time, then the knob tuple itself, so planning is
+        deterministic — and tightening the deadline can only move the
+        choice to an equal-or-faster-predicted tuple.
+        """
+        scored = []
+        for kn in self.grid:
+            pred = self.cost_model.predict(n_vertices, n_edges, kn)
+            scored.append((kn, pred, quality_score(kn)))
+
+        deadline = sla.deadline_s
+        feasible = [
+            s for s in scored if deadline is None or s[1].total_s <= deadline
+        ]
+        meets_deadline = bool(feasible)
+        if not feasible:  # best effort: fastest tuple in the grid
+            choice = min(scored, key=lambda s: (s[1].total_s, s[0]))
+            return self._finish(choice, n_vertices, False, False, sla)
+
+        target = sla.target_quality
+        if target is not None:
+            reaching = [s for s in feasible if s[2] >= target]
+            if reaching:
+                # meet the accuracy target at minimum predicted cost
+                choice = min(reaching, key=lambda s: (s[1].total_s, s[0]))
+                return self._finish(choice, n_vertices, True, True, sla)
+        # no (reachable) target: maximize quality within the deadline
+        choice = max(
+            feasible, key=lambda s: (s[2], -s[1].total_s, s[0])
+        )
+        return self._finish(choice, n_vertices, True, target is None, sla)
+
+    def _finish(self, choice, n_vertices, meets_deadline, meets_quality, sla):
+        kn, pred, qual = choice
+        m = _subgraph_count(n_vertices, kn.n_qubits)
+        return KnobPlan(
+            knobs=kn,
+            merge_level=min(self.default_merge_level, max(m - 1, 0)),
+            predicted=pred,
+            quality=qual,
+            meets_deadline=meets_deadline,
+            meets_quality=meets_quality if sla.target_quality is not None else True,
+        )

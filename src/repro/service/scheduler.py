@@ -1,0 +1,347 @@
+"""Cross-request batching Max-Cut solve service (DESIGN.md §6.1).
+
+The paper's pipeline solves one problem per invocation; the ROADMAP north
+star is a service under concurrent load. The scheduler closes that gap by
+amortizing solver capacity *across* requests:
+
+  1. `submit` admits a request, consults the result cache (§6.3) on the
+     canonical graph hash, and — on a miss — asks the SLA planner (§6.2)
+     for a knob tuple, partitions via `core.partition.partition_for_solver`
+     at the chosen qubit budget, and enqueues one work item per subgraph;
+  2. `pump` packs pending subgraphs from *any* request into fixed-shape
+     batches for the already-cached jitted `solve_subgraph_batch_program`.
+     Batches are shape-bucketed by the QAOA config: every dispatch in a
+     bucket uses exactly ``batch_slots`` rows padded to the qubit budget's
+     edge capacity N·(N−1)/2 — the maximum a ≤N-vertex subgraph can carry
+     — so a bucket compiles exactly once no matter how request sizes mix;
+  3. per-request completion tracking (mirroring `serving/engine.py`'s done
+     mask, here a remaining-subgraph count) fires the merge stage the
+     moment a request's last candidate lands: the default path runs
+     `core.paraqaoa.merge_candidates` — the *same* merge `core.solve`
+     runs, which together with the per-row bit-stability of the batched
+     solver makes service cuts bit-identical to solo `solve` runs on the
+     same knobs — while streaming requests run the anytime
+     `core.merge.merge_stream` and surface the best-known cut after every
+     merge level (§6.4).
+
+Everything is synchronous SPMD-style pumping, not threads: "concurrent"
+means many admitted requests in flight across the shared batch queue,
+exactly like the decode engine's continuous batching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merge as merge_mod
+from repro.core import paraqaoa as para_mod
+from repro.core import qaoa as qaoa_mod
+from repro.core.graph import Graph, cut_value
+from repro.core.partition import partition_for_solver
+from repro.service.cache import ResultCache
+from repro.service.canonical import canonical_form
+from repro.service.planner import SLA, KnobPlan, Planner
+
+
+def edge_capacity(n_qubits: int) -> int:
+    """Max simple-edge count of a subgraph that fits an N-qubit solver."""
+    return max(n_qubits * (n_qubits - 1) // 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    batch_slots: int = 16  # fixed rows per solver dispatch (one shape/bucket)
+    cache_capacity: int = 256
+    enable_cache: bool = True
+    max_qubits: int = 12  # hardware budget cap handed to the planner
+    anytime_min_levels: int = 2  # stream only when the merge has >1 level
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    assignment: np.ndarray
+    cut_value: float
+    cached: bool
+    plan: KnobPlan
+    latency_s: float
+    timings: dict
+    anytime: list  # [(level, n_levels, best_known_cut)] for streamed requests
+
+
+class _Request:
+    def __init__(self, rid, graph, sla, plan, cfg, stream, on_update, form):
+        self.id = rid
+        self.graph = graph
+        self.sla = sla
+        self.plan = plan
+        self.cfg = cfg  # ParaQAOAConfig derived from plan.knobs
+        self.stream = stream
+        self.on_update = on_update
+        self.form = form  # canonical form, when the cache is enabled
+        self.submit_t = time.perf_counter()
+        self.part = None
+        self.bit_indices = None  # (M, K) int64
+        self.remaining = 0
+        self.solve_done_t = None
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    dispatches: int = 0
+    slots_total: int = 0
+    slots_filled: int = 0
+    completed: int = 0
+    cache_served: int = 0
+
+    @property
+    def fill_ratio(self) -> float:
+        return self.slots_filled / self.slots_total if self.slots_total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "dispatches": self.dispatches,
+            "slots_total": self.slots_total,
+            "slots_filled": self.slots_filled,
+            "fill_ratio": round(self.fill_ratio, 4),
+            "completed": self.completed,
+            "cache_served": self.cache_served,
+        }
+
+
+class SolveService:
+    """Batched Max-Cut solve service over the ParaQAOA pipeline."""
+
+    def __init__(
+        self,
+        config: ServiceConfig = ServiceConfig(),
+        planner: Planner | None = None,
+        cache: ResultCache | None = None,
+    ):
+        self.config = config
+        self.planner = planner or Planner(
+            max_qubits=config.max_qubits, batch_slots=config.batch_slots
+        )
+        self.cache = cache or ResultCache(config.cache_capacity)
+        self.stats = ServiceStats()
+        self.results: "OrderedDict[int, RequestResult]" = OrderedDict()
+        self._next_id = 0
+        self._active: dict[int, _Request] = {}
+        # bucket key: the (frozen, hashable) QAOAConfig — one compiled
+        # program and one queue per static solver configuration
+        self._buckets: "OrderedDict[qaoa_mod.QAOAConfig, deque]" = OrderedDict()
+        # in-flight dedup: canonical key → (primary request id, its quality);
+        # isomorphic requests admitted while their twin is still solving
+        # coalesce onto it and are served from cache when it completes
+        self._inflight: dict[str, tuple[int, float]] = {}
+        self._followers: dict[str, list] = {}
+
+    # ------------------------------------------------------------- admit --
+    def submit(
+        self,
+        graph: Graph,
+        sla: SLA = SLA(),
+        stream: bool = False,
+        on_update: Optional[Callable] = None,
+    ) -> int:
+        """Admit one solve request; returns its request id.
+
+        Cache hits complete immediately (the result is visible in
+        `results` on return); misses enqueue the request's subgraphs into
+        the shared batch queue — call `pump`/`drain` to make progress.
+        """
+        rid = self._next_id
+        self._next_id += 1
+        t0 = time.perf_counter()
+
+        plan = self.planner.plan(graph.n, graph.n_edges, sla)
+        form = None
+        if self.config.enable_cache:
+            form = canonical_form(graph)
+            hit = self.cache.lookup(graph, form=form, min_quality=plan.quality)
+            if hit is not None:
+                assignment, cut = hit
+                self._record_cached(
+                    rid, graph, plan, assignment, cut, t0,
+                    stream=stream, on_update=on_update,
+                )
+                return rid
+            # coalesce onto an in-flight isomorphic twin of sufficient
+            # quality: no work enqueued; served from cache at its merge.
+            # Streaming requests bypass dedup — they want per-level updates.
+            primary = self._inflight.get(form.key)
+            if primary is not None and primary[1] >= plan.quality and not stream:
+                self._followers.setdefault(form.key, []).append(
+                    (rid, graph, sla, plan, form, t0)
+                )
+                return rid
+
+        self._admit(rid, graph, sla, plan, form, stream, on_update)
+        return rid
+
+    def _admit(self, rid, graph, sla, plan, form, stream, on_update) -> None:
+        """Enqueue a request's subgraphs into its shape bucket."""
+        kn = plan.knobs
+        cfg = para_mod.ParaQAOAConfig(
+            n_qubits=kn.n_qubits,
+            top_k=kn.top_k,
+            merge_level=plan.merge_level,
+            p_layers=kn.p_layers,
+            opt_steps=kn.opt_steps,
+            beam_width=kn.beam_width,
+        )
+        req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form)
+        req.part = partition_for_solver(graph, kn.n_qubits)
+        req.bit_indices = np.zeros((req.part.m, kn.top_k), dtype=np.int64)
+        req.remaining = req.part.m
+        self._active[rid] = req
+        if form is not None and form.key not in self._inflight:
+            self._inflight[form.key] = (rid, plan.quality)
+
+        qcfg = cfg.qaoa_config()
+        queue = self._buckets.setdefault(qcfg, deque())
+        for idx in range(req.part.m):
+            queue.append((req, idx))
+
+    def _record_cached(
+        self, rid, graph, plan, assignment, cut, t0,
+        stream=False, on_update=None,
+    ) -> None:
+        # a streamed request served from cache still gets its anytime
+        # contract: one final update (the answer is complete immediately)
+        anytime = [(1, 1, cut)] if stream else []
+        if stream and on_update is not None:
+            on_update(rid, 1, 1, cut)
+        now = time.perf_counter()
+        self.results[rid] = RequestResult(
+            request_id=rid,
+            assignment=assignment,
+            cut_value=cut,
+            cached=True,
+            plan=plan,
+            latency_s=now - t0,
+            timings={"cache_s": now - t0},
+            anytime=anytime,
+        )
+        self.stats.completed += 1
+        self.stats.cache_served += 1
+
+    # ------------------------------------------------------------- solve --
+    def pump(self) -> bool:
+        """Dispatch one cross-request batch (the fullest bucket) and run
+        any merges it unblocks. Returns True while work remains."""
+        bucket = max(
+            (b for b in self._buckets.items() if b[1]),
+            key=lambda b: len(b[1]),
+            default=None,
+        )
+        if bucket is None:
+            return False
+        qcfg, queue = bucket
+        slots = self.config.batch_slots
+        items = [queue.popleft() for _ in range(min(slots, len(queue)))]
+
+        edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
+            [req.part.subgraphs[idx] for req, idx in items],
+            qcfg.n_qubits,
+            e_pad=edge_capacity(qcfg.n_qubits),
+            n_rows=slots,
+        )
+        program = qaoa_mod.solve_subgraph_batch_program(qcfg)
+        res = program(edges, weights, masks)
+        bitstrings = np.asarray(res.bitstrings)
+
+        self.stats.dispatches += 1
+        self.stats.slots_total += slots
+        self.stats.slots_filled += len(items)
+
+        done_requests = []
+        for slot, (req, idx) in enumerate(items):
+            req.bit_indices[idx] = bitstrings[slot]
+            req.remaining -= 1
+            if req.remaining == 0:
+                done_requests.append(req)
+        for req in done_requests:
+            req.solve_done_t = time.perf_counter()
+            self._merge(req)
+        return any(self._buckets.values())
+
+    def drain(self) -> "OrderedDict[int, RequestResult]":
+        """Run the scheduler until every admitted request has a result."""
+        while self.pump():
+            pass
+        return self.results
+
+    # ------------------------------------------------------------- merge --
+    def _merge(self, req: _Request) -> None:
+        anytime: list = []
+        if req.stream and req.part.m >= self.config.anytime_min_levels:
+            plan, bw = para_mod.merge_inputs(
+                req.part, req.bit_indices, req.cfg
+            )
+            best_cut, best_assign = -np.inf, None
+            for snap in merge_mod.merge_stream(plan, bw):
+                if snap.cut_value > best_cut:
+                    best_cut, best_assign = snap.cut_value, snap.assignment
+                anytime.append((snap.level, snap.n_levels, best_cut))
+                if req.on_update is not None:
+                    req.on_update(req.id, snap.level, snap.n_levels, best_cut)
+            assignment = best_assign
+        else:
+            assignment, _, _ = para_mod.merge_candidates(
+                req.part, req.bit_indices, req.cfg
+            )
+        # final re-score from scratch, exactly as core.solve reconciles
+        cut = float(cut_value(req.graph, jnp.asarray(assignment)))
+        if req.stream and not anytime:
+            # single-level merges skip the stream; still honor the anytime
+            # contract with one final update
+            anytime.append((1, 1, cut))
+            if req.on_update is not None:
+                req.on_update(req.id, 1, 1, cut)
+
+        now = time.perf_counter()
+        if self.config.enable_cache:
+            self.cache.store(
+                req.graph,
+                assignment,
+                cut,
+                quality=req.plan.quality,
+                form=req.form,
+            )
+        self.results[req.id] = RequestResult(
+            request_id=req.id,
+            assignment=np.asarray(assignment),
+            cut_value=cut,
+            cached=False,
+            plan=req.plan,
+            latency_s=now - req.submit_t,
+            timings={
+                "solve_s": req.solve_done_t - req.submit_t,
+                "merge_s": now - req.solve_done_t,
+                "total_s": now - req.submit_t,
+            },
+            anytime=anytime,
+        )
+        self.stats.completed += 1
+        del self._active[req.id]
+
+        # serve coalesced isomorphic followers from the just-stored entry
+        if req.form is not None:
+            self._inflight.pop(req.form.key, None)
+            for frid, g, sla, plan, form, t0 in self._followers.pop(
+                req.form.key, []
+            ):
+                hit = self.cache.lookup(g, form=form, min_quality=plan.quality)
+                if hit is not None:
+                    self._record_cached(frid, g, plan, hit[0], hit[1], t0)
+                else:
+                    # canonical-key collision surfaced by the cache's
+                    # re-score: solve the follower for real
+                    self._admit(frid, g, sla, plan, form, False, None)

@@ -1,0 +1,42 @@
+"""Seed-stable request-mix generation shared by the service drivers
+(`launch/serve_maxcut.py`, `benchmarks/service_bench.py`): varied-size
+Erdős-Rényi instances with a controllable fraction of vertex-relabeled
+repeats, the traffic shape that exercises the canonical-graph cache
+(DESIGN.md §6.3)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+def relabel(graph: Graph, perm: np.ndarray) -> Graph:
+    """The same instance under a vertex permutation (isomorphic copy)."""
+    e = np.asarray(graph.edges)[: graph.n_edges]
+    w = np.asarray(graph.weights)[: graph.n_edges]
+    return Graph.from_edges(graph.n, perm[e], w)
+
+
+def request_mix(
+    load: int,
+    n_range: tuple,
+    p: float,
+    repeat_frac: float,
+    seed: int,
+) -> list:
+    """Seed-stable graphs for one offered load; ~repeat_frac of them are
+    vertex-relabeled copies of earlier ones (isomorphic, cache-hittable)."""
+    rng = np.random.default_rng(seed)
+    fresh, graphs = [], []
+    for _ in range(load):
+        if fresh and rng.random() < repeat_frac:
+            g0 = fresh[int(rng.integers(len(fresh)))]
+            perm = rng.permutation(g0.n).astype(np.int32)
+            graphs.append(relabel(g0, perm))
+        else:
+            n = int(rng.integers(n_range[0], n_range[1] + 1))
+            g = Graph.erdos_renyi(n, p, seed=int(rng.integers(1 << 30)))
+            fresh.append(g)
+            graphs.append(g)
+    return graphs

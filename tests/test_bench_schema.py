@@ -1,0 +1,89 @@
+"""results/BENCH_*.json schema validation: every committed benchmark file
+must carry the envelope documented in docs/EXPERIMENTS.md §Schema, so
+benchmark writers can't silently drift from it. Pure JSON checking — no
+jax import."""
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+EXPECTED_FILES = {
+    "BENCH_schedules.json",
+    "BENCH_distributed.json",
+    "BENCH_service.json",
+}
+
+ENVELOPE_KEYS = {"suite", "jax_version", "backend", "device_count", "rows"}
+
+_DERIVED = re.compile(r"^[\w.+-]+=[^;]*(;[\w.+-]+=[^;]*)*$")
+
+
+def bench_files():
+    return sorted(RESULTS.glob("BENCH_*.json"))
+
+
+def test_expected_bench_files_committed():
+    names = {p.name for p in bench_files()}
+    missing = EXPECTED_FILES - names
+    assert not missing, f"missing committed benchmark files: {missing}"
+
+
+@pytest.mark.parametrize("path", bench_files(), ids=lambda p: p.name)
+def test_envelope(path):
+    payload = json.loads(path.read_text())
+    assert ENVELOPE_KEYS <= set(payload), (
+        f"{path.name}: missing envelope keys {ENVELOPE_KEYS - set(payload)}"
+    )
+    assert path.name == f"BENCH_{payload['suite']}.json"
+    assert isinstance(payload["jax_version"], str) and payload["jax_version"]
+    assert isinstance(payload["backend"], str) and payload["backend"]
+    assert isinstance(payload["device_count"], int)
+    assert payload["device_count"] >= 1
+    assert isinstance(payload["rows"], list) and payload["rows"]
+
+
+@pytest.mark.parametrize("path", bench_files(), ids=lambda p: p.name)
+def test_rows(path):
+    payload = json.loads(path.read_text())
+    suite = payload["suite"]
+    for i, row in enumerate(payload["rows"]):
+        where = f"{path.name} rows[{i}]"
+        assert isinstance(row, dict), where
+        assert isinstance(row.get("name"), str), where
+        # `name` is `<suite>/<case>` (EXPERIMENTS.md §Schema)
+        assert row["name"].startswith(f"{suite}/"), (
+            f"{where}: name {row['name']!r} must start with '{suite}/'"
+        )
+        assert isinstance(row.get("runtime_s"), (int, float)), where
+        assert row["runtime_s"] >= 0, where
+        # `derived` is a `;`-separated `k=v` string
+        derived = row.get("derived", "")
+        assert isinstance(derived, str), where
+        if derived:
+            assert _DERIVED.match(derived), (
+                f"{where}: derived {derived!r} is not ';'-separated k=v"
+            )
+
+
+def test_service_rows_carry_load_metrics():
+    """The service suite's mode rows must record the load-curve fields the
+    EXPERIMENTS.md §Schema entry documents."""
+    path = RESULTS / "BENCH_service.json"
+    payload = json.loads(path.read_text())
+    modes = [r for r in payload["rows"] if "mode" in r]
+    assert {r["mode"] for r in modes} == {"sequential", "batched"}
+    for row in modes:
+        for key in ("load", "throughput_rps", "p50_s", "p99_s"):
+            assert key in row, f"{row['name']}: missing {key}"
+    batched = [r for r in modes if r["mode"] == "batched"]
+    assert all("cache_hit_ratio" in r and "fill_ratio" in r for r in batched)
+    speedups = [r for r in payload["rows"] if "speedup" in r]
+    assert speedups, "missing service/speedup_* summary rows"
+    # the §6.1 amortization claim, as committed: >= 1.5x at >= 4 concurrent
+    big = [r for r in speedups if r["load"] >= 4]
+    assert big and all(r["speedup"] >= 1.5 for r in big), speedups
+    assert all(r["cut_equal"] for r in speedups)

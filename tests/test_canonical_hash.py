@@ -1,0 +1,125 @@
+"""Canonical graph hashing (service/canonical.py): padding-row invariance,
+vertex-relabeling invariance, and collision sanity against cut_value."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, cut_value
+from repro.service.canonical import canonical_form, canonical_key, normalized_edges
+
+
+def _relabel(g: Graph, perm: np.ndarray) -> Graph:
+    e = np.asarray(g.edges)[: g.n_edges]
+    w = np.asarray(g.weights)[: g.n_edges]
+    return Graph.from_edges(g.n, perm[e], w)
+
+
+def test_padding_row_invariance():
+    for seed in range(5):
+        g = Graph.erdos_renyi(12, 0.4, seed=seed)
+        e = np.asarray(g.edges)[: g.n_edges]
+        w = np.asarray(g.weights)[: g.n_edges]
+        for extra in (0, 3, 64):
+            g_pad = Graph.from_edges(12, e, w, pad_to=g.n_edges + extra)
+            assert canonical_key(g_pad) == canonical_key(g)
+
+
+def test_edge_order_and_duplicate_invariance():
+    g = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)], [1.0, 2.0, 3.0])
+    # reversed order, flipped endpoints, and a duplicated split-weight edge
+    g2 = Graph.from_edges(
+        4, [(3, 2), (2, 1), (1, 0), (0, 1)], [3.0, 2.0, 0.5, 0.5]
+    )
+    assert canonical_key(g2) == canonical_key(g)
+    # zero-weight edges contribute nothing to any cut -> ignored by the key
+    g3 = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3), (0, 3)],
+                          [1.0, 2.0, 3.0, 0.0])
+    assert canonical_key(g3) == canonical_key(g)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_vertex_relabeling_invariance(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 15))
+    g = Graph.erdos_renyi(n, 0.4, seed=seed)
+    f0 = canonical_form(g)
+    for _ in range(3):
+        perm = rng.permutation(n).astype(np.int32)
+        g2 = _relabel(g, perm)
+        f2 = canonical_form(g2)
+        assert f2.key == f0.key
+        # the canonical permutations compose: an assignment written in
+        # canonical order replays onto either labeling with the same cut
+        a = rng.integers(0, 2, n).astype(np.int8)
+        canon = np.empty(n, dtype=np.int8)
+        canon[f0.perm] = a
+        a2 = canon[f2.perm]
+        c1 = float(cut_value(g, jnp.asarray(a)))
+        c2 = float(cut_value(g2, jnp.asarray(a2)))
+        assert c1 == pytest.approx(c2)
+
+
+def test_weighted_relabeling_invariance():
+    rng = np.random.default_rng(3)
+    n = 10
+    e = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < 0.5]
+    w = rng.uniform(0.5, 2.0, len(e)).astype(np.float32)
+    g = Graph.from_edges(n, e, w)
+    perm = rng.permutation(n).astype(np.int32)
+    assert canonical_key(_relabel(g, perm)) == canonical_key(g)
+
+
+def test_distinct_graphs_distinct_keys():
+    """Collision sanity: structurally different instances (different
+    cut-value landscapes per core.graph.cut_value) must not share a key."""
+    keys = {}
+    rng = np.random.default_rng(0)
+    for seed in range(25):
+        g = Graph.erdos_renyi(12, 0.4, seed=100 + seed)
+        key = canonical_key(g)
+        # witness that the instances really are different problems: some
+        # assignment scores differently (or edge counts differ)
+        for other in keys.values():
+            a = rng.integers(0, 2, 12).astype(np.int8)
+            same_cut = float(cut_value(g, jnp.asarray(a))) == float(
+                cut_value(other, jnp.asarray(a))
+            )
+            if not same_cut or g.n_edges != other.n_edges:
+                assert key != canonical_key(other)
+        keys[key] = g
+    assert len(keys) == 25
+
+
+def test_large_graph_hashed_path_relabeling_invariance():
+    """Above _EXACT_THRESHOLD vertices the vectorized hashed-WL path runs;
+    it must still be relabeling-invariant and keep the perm round trip."""
+    rng = np.random.default_rng(5)
+    g = Graph.erdos_renyi(600, 0.01, seed=5)
+    f0 = canonical_form(g)
+    perm = rng.permutation(600).astype(np.int32)
+    f2 = canonical_form(_relabel(g, perm))
+    assert f2.key == f0.key
+    a = rng.integers(0, 2, 600).astype(np.int8)
+    canon = np.empty(600, dtype=np.int8)
+    canon[f0.perm] = a
+    c1 = float(cut_value(g, jnp.asarray(a)))
+    c2 = float(cut_value(_relabel(g, perm), jnp.asarray(canon[f2.perm])))
+    assert c1 == pytest.approx(c2)
+    # and distinct large instances stay distinct
+    assert canonical_key(Graph.erdos_renyi(600, 0.01, seed=6)) != f0.key
+
+
+def test_weight_change_changes_key():
+    g1 = Graph.from_edges(3, [(0, 1), (1, 2)], [1.0, 1.0])
+    g2 = Graph.from_edges(3, [(0, 1), (1, 2)], [1.0, 2.0])
+    assert canonical_key(g1) != canonical_key(g2)
+
+
+def test_normalized_edges_strips_padding_and_zero_weight():
+    g = Graph.from_edges(5, [(0, 1), (2, 1), (3, 4), (2, 4)],
+                         [1.0, 2.0, 0.0, 1.5], pad_to=16)
+    uv, w = normalized_edges(g)
+    assert uv.shape == (3, 2)  # zero-weight and the 12 padding rows dropped
+    assert (uv[:, 0] < uv[:, 1]).all()
+    assert w.sum() == pytest.approx(4.5)

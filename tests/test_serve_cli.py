@@ -1,0 +1,55 @@
+"""CLI surface of the serving drivers: the `--reduced`/`--full-size` flag
+pair on launch/serve.py (the old store_true-with-default-True made the
+full-size path unreachable) and the serve_maxcut argument grid. Parser-only
+— no model build, no jax device work."""
+
+from repro.launch.serve import build_parser as serve_parser
+from repro.launch.serve_maxcut import build_parser as maxcut_parser
+
+
+def test_serve_reduced_is_default():
+    args = serve_parser().parse_args(["--arch", "qwen1.5-0.5b"])
+    assert args.reduced is True
+
+
+def test_serve_full_size_reachable():
+    args = serve_parser().parse_args(["--arch", "qwen1.5-0.5b", "--full-size"])
+    assert args.reduced is False
+
+
+def test_serve_reduced_explicit():
+    args = serve_parser().parse_args(["--arch", "qwen1.5-0.5b", "--reduced"])
+    assert args.reduced is True
+
+
+def test_serve_last_flag_wins():
+    args = serve_parser().parse_args(
+        ["--arch", "x", "--reduced", "--full-size"]
+    )
+    assert args.reduced is False
+    args = serve_parser().parse_args(
+        ["--arch", "x", "--full-size", "--reduced"]
+    )
+    assert args.reduced is True
+
+
+def test_serve_maxcut_defaults():
+    args = maxcut_parser().parse_args([])
+    assert args.requests == 8
+    assert args.deadline is None
+    assert args.target_quality is None
+    assert not args.stream and not args.no_cache
+
+
+def test_serve_maxcut_sla_and_service_flags():
+    args = maxcut_parser().parse_args([
+        "--requests", "4", "--deadline", "2.5", "--target-quality", "11",
+        "--batch", "8", "--cache-capacity", "32", "--no-cache", "--stream",
+        "--qubits", "8", "--repeat-frac", "0.5",
+    ])
+    assert args.requests == 4
+    assert args.deadline == 2.5
+    assert args.target_quality == 11.0
+    assert args.batch == 8 and args.cache_capacity == 32
+    assert args.no_cache and args.stream
+    assert args.qubits == 8 and args.repeat_frac == 0.5

@@ -1,0 +1,259 @@
+"""Solve service (DESIGN.md §6): cross-request batching parity with solo
+`core.solve`, SLA planner monotonicity, result-cache behavior, and the
+anytime merge stream."""
+
+import numpy as np
+import pytest
+
+from repro.core import ParaQAOAConfig, solve
+from repro.core.graph import Graph
+from repro.service import (
+    SLA,
+    CostModel,
+    KnobTuple,
+    Planner,
+    ResultCache,
+    ServiceConfig,
+    SolveService,
+    edge_capacity,
+    quality_score,
+)
+
+
+def _cfg_from_result(r) -> ParaQAOAConfig:
+    kn = r.plan.knobs
+    return ParaQAOAConfig(
+        n_qubits=kn.n_qubits, top_k=kn.top_k, merge_level=r.plan.merge_level,
+        p_layers=kn.p_layers, opt_steps=kn.opt_steps,
+        beam_width=kn.beam_width,
+    )
+
+
+# --------------------------------------------------------------- scheduler --
+def test_batched_service_bit_identical_to_solo_solve():
+    """The §6.1 parity contract at >= 4 concurrent requests: cross-request
+    packing into fixed-shape buckets must not change any request's answer
+    relative to `core.solve` on the same knobs."""
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=8,
+                                     enable_cache=False))
+    graphs = [Graph.erdos_renyi(n, 0.3, seed=s)
+              for s, n in enumerate((18, 25, 21, 30))]
+    sla = SLA(deadline_s=30.0)
+    rids = [svc.submit(g, sla) for g in graphs]
+    res = svc.drain()
+    assert len(res) == 4 and svc.stats.completed == 4
+    for g, rid in zip(graphs, rids):
+        r = res[rid]
+        solo = solve(g, _cfg_from_result(r))
+        assert r.cut_value == solo.cut_value, (rid, r.cut_value, solo.cut_value)
+        np.testing.assert_array_equal(r.assignment, solo.assignment)
+    assert svc.stats.slots_filled > 4  # more subgraphs than requests
+
+
+def test_batches_pack_across_requests():
+    svc = SolveService(ServiceConfig(batch_slots=16, max_qubits=8,
+                                     enable_cache=False))
+    graphs = [Graph.erdos_renyi(24, 0.3, seed=s) for s in range(4)]
+    for g in graphs:
+        svc.submit(g, SLA(deadline_s=30.0))
+    total_subgraphs = sum(
+        len(req.part.subgraphs) for req in svc._active.values()
+    )
+    svc.drain()
+    assert total_subgraphs > svc.config.batch_slots // 2
+    # 4 requests' subgraphs fit far fewer dispatches than requests x rounds
+    assert svc.stats.dispatches <= -(-total_subgraphs // svc.config.batch_slots) + 1
+    assert svc.stats.fill_ratio > 0.5
+
+
+def test_edge_capacity_covers_any_subgraph():
+    for nq in (4, 6, 10):
+        assert edge_capacity(nq) == nq * (nq - 1) // 2
+
+
+# ----------------------------------------------------------------- planner --
+def test_tighter_deadline_never_selects_slower_knobs():
+    """Acceptance: for any decreasing deadline sequence the predicted time
+    of the selected knob tuple is non-increasing."""
+    planner = Planner(max_qubits=12)
+    for n, e in ((50, 180), (200, 1200), (1000, 10000)):
+        prev = None
+        for deadline in (300.0, 60.0, 20.0, 5.0, 1.0, 0.1, 0.001):
+            plan = planner.plan(n, e, SLA(deadline_s=deadline))
+            t = plan.predicted.total_s
+            if prev is not None:
+                assert t <= prev + 1e-12, (n, deadline, t, prev)
+            prev = t
+
+
+def test_planner_respects_feasible_deadline():
+    planner = Planner(max_qubits=12)
+    plan = planner.plan(100, 500, SLA(deadline_s=60.0))
+    assert plan.meets_deadline
+    assert plan.predicted.total_s <= 60.0
+
+
+def test_planner_quality_target_met_at_min_cost():
+    planner = Planner(max_qubits=12)
+    free = planner.plan(80, 400, SLA())
+    target = quality_score(KnobTuple(10, 2, 12, 128))
+    tight = planner.plan(80, 400, SLA(deadline_s=1e6, target_quality=target))
+    assert tight.meets_quality and tight.quality >= target
+    # meeting a target costs no more than unconstrained max-quality
+    assert tight.predicted.total_s <= free.predicted.total_s + 1e-12
+
+
+def test_planner_unconstrained_maximizes_quality():
+    planner = Planner(max_qubits=12)
+    plan = planner.plan(60, 300, SLA())
+    assert plan.quality == max(quality_score(kn) for kn in planner.grid)
+
+
+def test_cost_model_fit_from_bench_rows():
+    knobs = KnobTuple(n_qubits=10, top_k=1, opt_steps=12, beam_width=64)
+    rows = [
+        {"mode": "single", "n": 1000, "partition_s": 0.03, "solve_s": 5.0,
+         "merge_s": 1.2, "m": 112},
+        {"mode": "single", "n": 2000, "partition_s": 0.08, "solve_s": 7.6,
+         "merge_s": 0.97, "m": 223},
+    ]
+    cm = CostModel.fit(rows, knobs)
+    pred = cm.predict(1000, int(0.02 * 1000 * 999 / 2), knobs)
+    # fitted model lands within 3x of the training rows (median fit over
+    # two instances; this is a sanity band, not a regression bound)
+    assert 0.3 < pred.solve_s / 5.0 < 3.0
+    assert pred.total_s > 0
+
+
+def test_cost_model_missing_file_falls_back_to_defaults():
+    cm = CostModel.from_bench_file("/nonexistent/BENCH.json")
+    assert cm.predict(100, 500, KnobTuple(8, 2, 12, 128)).total_s > 0
+
+
+# ------------------------------------------------------------------- cache --
+from repro.service.workload import relabel as _relabel  # noqa: E402
+
+
+def test_cache_replays_onto_relabeled_instance():
+    g = Graph.erdos_renyi(20, 0.4, seed=1)
+    out = solve(g, ParaQAOAConfig(n_qubits=8, top_k=2, opt_steps=10))
+    cache = ResultCache(capacity=4)
+    cache.store(g, out.assignment, out.cut_value, quality=1.0)
+    perm = np.random.default_rng(0).permutation(20).astype(np.int32)
+    hit = cache.lookup(_relabel(g, perm), min_quality=1.0)
+    assert hit is not None
+    _, cut = hit
+    assert cut == pytest.approx(out.cut_value)
+    assert cache.stats.hits == 1 and cache.stats.verify_failures == 0
+
+
+def test_cache_quality_gate():
+    g = Graph.erdos_renyi(15, 0.4, seed=2)
+    cache = ResultCache(capacity=4)
+    cache.store(g, np.zeros(15, dtype=np.int8), 0.0, quality=1.0)
+    assert cache.lookup(g, min_quality=2.0) is None  # cached too cheap
+    assert cache.stats.quality_misses == 1
+    assert cache.lookup(g, min_quality=0.5) is not None
+
+
+def test_cache_lru_eviction_order():
+    cache = ResultCache(capacity=2)
+    graphs = [Graph.erdos_renyi(10, 0.5, seed=s) for s in (10, 11, 12)]
+    for g in graphs[:2]:
+        cache.store(g, np.zeros(10, dtype=np.int8), 0.0)
+    assert cache.lookup(graphs[0]) is not None  # touch 0: now 1 is LRU
+    cache.store(graphs[2], np.zeros(10, dtype=np.int8), 0.0)
+    assert len(cache) == 2 and cache.stats.evictions == 1
+    assert cache.lookup(graphs[1]) is None  # evicted
+    assert cache.lookup(graphs[0]) is not None  # survived the eviction
+
+
+def test_cache_never_downgrades_entry():
+    g = Graph.erdos_renyi(12, 0.5, seed=3)
+    out = solve(g, ParaQAOAConfig(n_qubits=8, top_k=2, opt_steps=15))
+    cache = ResultCache(capacity=4)
+    cache.store(g, out.assignment, out.cut_value, quality=5.0)
+    cache.store(g, np.zeros(12, dtype=np.int8), 0.0, quality=1.0)
+    _, cut = cache.lookup(g, min_quality=5.0)
+    assert cut == pytest.approx(out.cut_value)
+
+
+def test_service_serves_isomorphic_repeat_from_cache():
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=8))
+    g = Graph.erdos_renyi(22, 0.3, seed=4)
+    rid0 = svc.submit(g, SLA(deadline_s=30.0))
+    svc.drain()
+    perm = np.random.default_rng(1).permutation(22).astype(np.int32)
+    rid1 = svc.submit(_relabel(g, perm), SLA(deadline_s=30.0))
+    r0, r1 = svc.results[rid0], svc.results[rid1]
+    assert not r0.cached and r1.cached
+    assert r1.cut_value == pytest.approx(r0.cut_value)
+    assert svc.stats.cache_served == 1
+
+
+def test_concurrent_isomorphic_requests_coalesce():
+    """Isomorphic twins admitted *before* their primary has solved must
+    still be served from the cache at the primary's merge, not solved
+    redundantly — the cache works under concurrent load, not just for
+    sequential repeats."""
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=8))
+    g = Graph.erdos_renyi(22, 0.3, seed=6)
+    rng = np.random.default_rng(2)
+    sla = SLA(deadline_s=30.0)
+    rid0 = svc.submit(g, sla)
+    twins = [
+        svc.submit(_relabel(g, rng.permutation(22).astype(np.int32)), sla)
+        for _ in range(2)
+    ]
+    svc.drain()
+    r0 = svc.results[rid0]
+    assert not r0.cached
+    for rid in twins:
+        r = svc.results[rid]
+        assert r.cached
+        assert r.cut_value == pytest.approx(r0.cut_value)
+    assert svc.stats.cache_served == 2
+    assert svc.cache.stats.hits == 2  # served via a real cache lookup
+
+
+# ----------------------------------------------------------------- anytime --
+def test_anytime_stream_monotone_and_final_matches_default():
+    g = Graph.erdos_renyi(40, 0.3, seed=5)
+    sla = SLA(deadline_s=30.0)
+    updates = []
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=8,
+                                     enable_cache=False))
+    rid = svc.submit(g, sla, stream=True,
+                     on_update=lambda *u: updates.append(u))
+    svc.drain()
+    r = svc.results[rid]
+    assert r.anytime, "streamed request recorded no anytime updates"
+    best = [u[2] for u in r.anytime]
+    assert all(a <= b for a, b in zip(best, best[1:])), best
+    assert len(updates) == len(r.anytime)
+    n_levels = r.anytime[0][1]
+    assert [u[0] for u in r.anytime] == list(range(1, n_levels + 1))
+    # the stream's final best-known cut is the request's result
+    assert r.cut_value == pytest.approx(best[-1])
+    # and the assignment really achieves it
+    from repro.core.graph import cut_value as cv
+    import jax.numpy as jnp
+
+    assert float(cv(g, jnp.asarray(r.assignment))) == pytest.approx(r.cut_value)
+
+
+def test_streamed_cache_hit_still_fires_one_update():
+    """A streaming request served from cache must still honor the anytime
+    contract: exactly one (final) update instead of silence."""
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=8))
+    g = Graph.erdos_renyi(20, 0.3, seed=7)
+    sla = SLA(deadline_s=30.0)
+    svc.submit(g, sla)
+    svc.drain()
+    updates = []
+    rid = svc.submit(g, sla, stream=True,
+                     on_update=lambda *u: updates.append(u))
+    r = svc.results[rid]
+    assert r.cached
+    assert r.anytime == [(1, 1, r.cut_value)]
+    assert updates == [(rid, 1, 1, r.cut_value)]
