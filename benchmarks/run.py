@@ -45,6 +45,9 @@ SUITES = {
     "sched_bench": lambda full: kernel_bench.run_schedules(
         n_qubits=16 if full else 14
     ),
+    "sharded_engine": lambda full: kernel_bench.run_sharded_engine(
+        n_qubits=16 if full else 14, opt_steps=30 if full else 20
+    ),
 }
 
 
@@ -55,12 +58,12 @@ def main() -> None:
     ap.add_argument("--save", default=None, help="write rows to JSON")
     args = ap.parse_args()
 
-    # sched_bench needs a multi-device view; emulate before jax initializes —
-    # but only when it is the *sole* selected suite, because forcing 8
-    # emulated devices distorts the other suites' single-device timings.
-    # In a combined run sched_bench degrades to per-axis skip notes unless
-    # XLA_FLAGS already provides the devices.
-    if args.only == "sched_bench":
+    # sched_bench/sharded_engine need a multi-device view; emulate before
+    # jax initializes — but only when one of them is the *sole* selected
+    # suite, because forcing 8 emulated devices distorts the other suites'
+    # single-device timings. In a combined run they degrade to per-axis
+    # skip notes unless XLA_FLAGS already provides the devices.
+    if args.only in ("sched_bench", "sharded_engine"):
         from repro import compat
 
         compat.ensure_host_device_count(8)

@@ -44,6 +44,10 @@ ap.add_argument("--mesh", type=str, default=None, metavar="SPEC",
 ap.add_argument("--merge", choices=("auto", "striped", "single"),
                 default="auto", dest="merge_mode",
                 help="distributed merge policy (see solve_maxcut --help)")
+ap.add_argument("--sharded-opt-steps", type=int, default=0,
+                help="Adam steps on oversized (model-sharded) subproblem "
+                "parameters, run through the sharded evolution "
+                "(DESIGN.md §2.6); 0 keeps the linear ramp")
 args = ap.parse_args()
 
 mesh_spec = None
@@ -67,13 +71,15 @@ print(f"  {graph.n_edges} edges ({time.time()-t0:.1f}s)")
 cfg = ParaQAOAConfig(
     n_qubits=args.qubits, top_k=args.k, p_layers=2,
     opt_steps=args.opt_steps, beam_width=64, refine_steps=args.refine,
+    sharded_opt_steps=args.sharded_opt_steps,
 )
 if mesh_spec is not None:
     out = solve_distributed(graph, cfg, mesh_spec, merge_mode=args.merge_mode)
     extra = out.report.extra
     print(f"mesh {extra['mesh']}: {extra['merge_shards']} merge shards "
           f"({extra['merge_mode']}), "
-          f"{extra['sharded_subproblems']} model-sharded subproblems")
+          f"{extra['sharded_subproblems']} model-sharded subproblems "
+          f"(sharded_opt_steps={extra['sharded_opt_steps']})")
 else:
     out = solve(graph, cfg)
 print(f"ParaQAOA cut = {out.cut_value:.0f} on {args.n} vertices")

@@ -120,6 +120,185 @@ def check_merge_sharded():
     return out
 
 
+def check_engine_grad():
+    """jax.grad through the sharded evolution vs the single-device
+    gradient (float32 tolerance), plus the sharded Adam ascent improving
+    on the linear ramp — the DESIGN.md §2.6 differentiability contract."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import engine
+    from repro.kernels import ops
+
+    out = {}
+    n = 10
+    g = Graph.erdos_renyi(n, 0.5, seed=3)
+    gammas, betas = qaoa_mod.linear_ramp_init(3, 0.75)
+
+    cutv = ref.cutvals(n, g.edges, g.weights)
+    flat_loss = lambda p: qaoa_mod.qaoa_expectation(p, cutv, n)
+    want = jax.grad(flat_loss)((gammas, betas))
+    scale = max(float(jnp.max(jnp.abs(x))) for x in want)
+
+    for d in (2, 4):
+        mesh = compat.make_mesh((d,), ("model",))
+        layout = engine.ShardedLayout(n=n, axis="model", axis_size=d)
+
+        def local_grad(edges, weights, gm, bt):
+            cut = engine.cut_table(layout, edges, weights)
+
+            def local_exp(params):
+                gg, bb = params
+                re, im, in_b = engine.evolve(layout, cut, gg, bb)
+                return ops.expectation(re, im, cut.at(in_b))
+
+            grads = jax.grad(local_exp)((gm, bt))
+            return jax.tree.map(lambda x: jax.lax.psum(x, "model"), grads)
+
+        run = compat.jit(
+            compat.shard_map(
+                local_grad, mesh, in_specs=(P(),) * 4, out_specs=(P(), P())
+            )
+        )
+        got = run(g.edges, g.weights, gammas, betas)
+        err = max(
+            float(jnp.max(jnp.abs(w - g_))) for w, g_ in zip(want, got)
+        )
+        # float32 forward/backward through p=3 layers + collectives: the
+        # elementwise error is a few 1e-4 of the gradient scale
+        out[f"d{d}_grad_close"] = bool(err <= 2e-3 * max(scale, 1.0))
+
+    mesh = compat.make_mesh((4,), ("model",))
+    r_ramp = dist.sharded_qaoa(g.edges, g.weights, n, gammas, betas, mesh)
+    r_opt = dist.sharded_qaoa(
+        g.edges, g.weights, n, gammas, betas, mesh, opt_steps=30
+    )
+    e_ramp = float(np.asarray(r_ramp.expectation).reshape(-1)[0])
+    e_opt = float(np.asarray(r_opt.expectation).reshape(-1)[0])
+    out["ascent_beats_ramp"] = bool(e_opt >= e_ramp)
+    # the sharded ascent must land where the single-device optimizer lands
+    cfg = qaoa_mod.QAOAConfig(n_qubits=n, p_layers=3, opt_steps=30)
+    p_flat = qaoa_mod.optimize_params(cutv, n, cfg)
+    out["ascent_matches_flat_optimum"] = bool(
+        all(
+            np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+            for a, b in zip(p_flat, (r_opt.gammas, r_opt.betas))
+        )
+    )
+    return out
+
+
+def check_engine_interpret():
+    """The sharded hot loop under `ops.using_implementation` — proves
+    every phase/mixer/cutvals/expectation op goes through the
+    `kernels.ops` dispatch per shard (no direct `ref.*` calls), and that
+    the `pallas_interpret` and `xla` paths agree.
+
+    Agreement grading: the cut tables are bitwise identical (integer-
+    valued sums); the evolved state is ulp-tight but *not* bitwise —
+    the mixer kernels generate RX^{⊗k} via runtime `pow` (MXU-friendly,
+    no gather) while `ref.rx_kron_parts` uses cumprod tables, a
+    deliberate last-ulp divergence (see kernels/mixer.py)."""
+    import repro.kernels.cutvals as cutvals_mod
+    import repro.kernels.fused_layer as fused_mod
+    import repro.kernels.mixer as mixer_mod
+    import repro.kernels.phase as phase_mod
+    from repro.kernels import ops
+
+    hits = {}
+
+    def wrap(mod, name):
+        orig = getattr(mod, name)
+
+        def wrapped(*a, **k):
+            hits[name] = hits.get(name, 0) + 1
+            return orig(*a, **k)
+
+        setattr(mod, name, wrapped)
+
+    wrap(fused_mod, "fused_phase_mixer_group")
+    wrap(mixer_mod, "mixer_group_matmul")
+    wrap(cutvals_mod, "cutvals_at")
+    wrap(phase_mod, "expectation")
+
+    n = 8
+    g = Graph.erdos_renyi(n, 0.5, seed=5)  # unit weights: exact cut sums
+    gammas = jnp.asarray([0.4, 0.3], jnp.float32)
+    betas = jnp.asarray([0.9, 0.5], jnp.float32)
+    mesh = compat.make_mesh((4,), ("model",))
+
+    out = {}
+    for schedule in ("faithful", "alternating"):
+        res_x = dist.sharded_qaoa(
+            g.edges, g.weights, n, gammas, betas, mesh, schedule=schedule
+        )
+        before = dict(hits)
+        with ops.using_implementation("pallas_interpret"):
+            res_p = dist.sharded_qaoa(
+                g.edges, g.weights, n, gammas, betas, mesh, schedule=schedule
+            )
+        fired = {k: hits.get(k, 0) - before.get(k, 0) for k in hits}
+        key = schedule
+        out[f"{key}_dispatch_fused_layer"] = fired.get(
+            "fused_phase_mixer_group", 0
+        ) > 0
+        out[f"{key}_dispatch_mixer"] = fired.get("mixer_group_matmul", 0) > 0
+        out[f"{key}_dispatch_cutvals_at"] = fired.get("cutvals_at", 0) > 0
+        out[f"{key}_dispatch_expectation"] = fired.get("expectation", 0) > 0
+        out[f"{key}_probs_close"] = bool(
+            np.allclose(
+                np.asarray(res_x.probs), np.asarray(res_p.probs), atol=1e-7
+            )
+        )
+        out[f"{key}_exp_close"] = bool(
+            np.allclose(
+                np.asarray(res_x.expectation),
+                np.asarray(res_p.expectation),
+                atol=1e-5,
+            )
+        )
+
+    # regression: opt_steps > 0 must work under non-xla dispatch too —
+    # the ascent pins its gradient trace to the xla path (Pallas kernels
+    # have no AD rule), so pallas_interpret + ascent lands on the same
+    # optimized parameters as the xla run
+    with ops.using_implementation("pallas_interpret"):
+        r_opt_p = dist.sharded_qaoa(
+            g.edges, g.weights, n, gammas, betas, mesh, opt_steps=3
+        )
+    with ops.using_implementation("xla"):
+        r_opt_x = dist.sharded_qaoa(
+            g.edges, g.weights, n, gammas, betas, mesh, opt_steps=3
+        )
+    out["opt_runs_under_interpret"] = bool(
+        np.allclose(
+            np.asarray(r_opt_p.gammas), np.asarray(r_opt_x.gammas), atol=1e-6
+        )
+        and np.allclose(
+            np.asarray(r_opt_p.betas), np.asarray(r_opt_x.betas), atol=1e-6
+        )
+    )
+
+    # cut tables bitwise: pallas_interpret cutvals_at == ref, per layout
+    from repro.core import engine
+
+    layout = engine.ShardedLayout(n=n, axis="model", axis_size=4)
+    bitwise = []
+    for d in range(4):
+        idx_a, idx_b = engine.layout_index_maps(layout, d)
+        for idx in (idx_a, idx_b):
+            idx = jnp.asarray(idx, jnp.int32)
+            with ops.using_implementation("pallas_interpret"):
+                got = ops.cutvals_at(idx, g.edges, g.weights)
+            bitwise.append(
+                np.array_equal(
+                    np.asarray(got),
+                    np.asarray(ref.cutvals_at(idx, g.edges, g.weights)),
+                )
+            )
+    out["cut_tables_bitwise"] = bool(all(bitwise))
+    return out
+
+
 def check_solve_distributed():
     """End-to-end `solve_distributed` vs single-device `solve` parity.
 
@@ -170,6 +349,8 @@ def main():
         "solve_pool": check_solve_pool,
         "sharded_qaoa": check_sharded_qaoa,
         "merge_sharded": check_merge_sharded,
+        "engine_grad": check_engine_grad,
+        "engine_interpret": check_engine_interpret,
         "solve_distributed": check_solve_distributed,
     }
     which = sys.argv[1] if len(sys.argv) > 1 else ""

@@ -13,6 +13,11 @@ DESIGN.md §2:
    mixer factorizes per qubit, so only the log2(axis_size) "global" qubits
    need cross-device mixing; one qubit-swap `all_to_all` rotates them into
    locality. Lifts the paper's 26-qubit/GPU cap to 26 + log2(model) qubits.
+   The per-layer evolution is the shared statevector engine
+   (`core/engine.py`, DESIGN.md §2.6): every op dispatches through
+   `kernels.ops` per shard, the whole evolution is differentiable through
+   the collectives, and `sharded_qaoa_batch` scans stacked same-n
+   subproblems through one cached program.
 
    Two collective schedules:
      - "faithful":    swap in + swap back every layer (2 a2a/layer) — the
@@ -44,9 +49,10 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
+from repro.core import engine
 from repro.core import merge as merge_mod
 from repro.core import qaoa as qaoa_mod
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
@@ -108,86 +114,72 @@ class ShardedQAOAResult(NamedTuple):
     bitstrings: jnp.ndarray  # (K,) int32 global basis indices (replicated)
     probs: jnp.ndarray  # (K,)
     expectation: jnp.ndarray  # scalar
-
-
-def _mix_bits(re, im, n_local: int, lo_bit: int, nbits: int, beta):
-    """Mix qubits [lo_bit, lo_bit+nbits) of a flat 2^n_local local state."""
-    x = 2 ** (n_local - lo_bit - nbits)
-    y = 2**lo_bit
-    C, D = ref.rx_kron_parts(beta, nbits)
-    re3 = re.reshape(x, 2**nbits, y)
-    im3 = im.reshape(x, 2**nbits, y)
-    re_new = jnp.einsum("ab,xby->xay", C, re3) - jnp.einsum("ab,xby->xay", D, im3)
-    im_new = jnp.einsum("ab,xby->xay", C, im3) + jnp.einsum("ab,xby->xay", D, re3)
-    return re_new.reshape(-1), im_new.reshape(-1)
+    gammas: jnp.ndarray  # (p,) as run (optimized when opt_steps > 0)
+    betas: jnp.ndarray  # (p,)
 
 
 @compat.cached_program
 def _sharded_qaoa_program(
     n: int,
     p_layers: int,
+    batch: int,
     mesh: Mesh,
     axis: str,
     top_k: int,
     schedule: str,
     group: int,
+    opt_steps: int,
+    learning_rate: float,
+    impl: str,
 ):
-    d_ax = mesh.shape[axis]
-    h = int(np.log2(d_ax))
-    assert 2**h == d_ax, f"axis size {d_ax} must be a power of two"
-    n_local = n - h
-    L = 2**n_local
-    chunk = L // d_ax
-    assert chunk >= 1, f"statevector too small for the mesh: n={n}, axis={d_ax}"
-    log2_chunk = int(np.log2(chunk))
+    """Cached sharded-statevector program over the shared engine.
 
-    def local_run(edges, weights, gammas, betas):
-        me = jax.lax.axis_index(axis)
-        idx_a = me * L + jnp.arange(L, dtype=jnp.int32)
-        q = jnp.arange(L, dtype=jnp.int32)
-        idx_b = (q // chunk) * L + me * chunk + (q % chunk)
-        cutv_a = ref.cutvals_at(idx_a, edges, weights)
-        cutv_b = ref.cutvals_at(idx_b, edges, weights)
+    ``batch`` > 1 runs a `lax.scan` over stacked same-n subgraphs — one
+    compiled program for the whole oversized-subproblem group instead of
+    one compile-shaped call per subgraph. ``impl`` is the `kernels.ops`
+    implementation the program was traced under: dispatch happens at
+    trace time, so it must be part of the cache key for
+    `ops.using_implementation` to reach the per-shard kernels.
+    """
+    # cache-key-only params: `impl` is read by the ops dispatch at trace
+    # time; `p_layers` (like array shapes) is re-handled by jit's own cache
+    del impl, p_layers
+    layout = engine.ShardedLayout(
+        n=n,
+        axis=axis,
+        axis_size=int(mesh.shape[axis]),
+        schedule=schedule,
+        group=group,
+    )
 
-        re = jnp.full((L,), 2.0 ** (-n / 2), dtype=jnp.float32)
-        im = jnp.zeros((L,), dtype=jnp.float32)
+    def one(edges, weights, gammas, betas):
+        cut = engine.cut_table(layout, edges, weights)
+        if opt_steps:
+            gammas, betas = engine.sharded_ascent(
+                layout, cut, gammas, betas, opt_steps, learning_rate
+            )
+        re, im, in_b = engine.evolve(layout, cut, gammas, betas)
+        exp = engine.expectation(layout, re, im, cut, in_b)
+        bits, probs = engine.top_candidates(layout, re, im, cut, in_b, top_k)
+        return ShardedQAOAResult(bits, probs, exp, gammas, betas)
 
-        def a2a(x):
-            return jax.lax.all_to_all(
-                x.reshape(d_ax, chunk), axis, split_axis=0, concat_axis=0
-            ).reshape(-1)
+    if batch == 1:
+        local_run = one
+    else:
 
-        in_b = False
-        for l in range(p_layers):  # p is small; unrolled keeps parity static
-            g, b = gammas[l], betas[l]
-            cutv = cutv_b if in_b else cutv_a
-            re, im = ref.apply_phase(re, im, cutv, g)
-            # mix the n-h locally-resident qubits
-            re, im = ops.apply_mixer(re, im, n_local, b, group=group)
-            # rotate the h shard-axis qubits into locality and mix them:
-            # after the swap they sit at local bits [log2_chunk, log2_chunk+h)
-            re, im = a2a(re), a2a(im)
-            re, im = _mix_bits(re, im, n_local, log2_chunk, h, b)
-            if schedule == "alternating":
-                in_b = not in_b
-            else:  # faithful: swap straight back to layout A
-                re, im = a2a(re), a2a(im)
+        def local_run(edges, weights, gammas, betas):
+            def body(_, ew):
+                e, w = ew
+                return 0, one(e, w, gammas, betas)
 
-        cutv = cutv_b if in_b else cutv_a
-        idx = idx_b if in_b else idx_a
-        exp = jax.lax.psum(ref.expectation(re, im, cutv), axis)
-        probs = re * re + im * im
-        v, i_loc = jax.lax.top_k(probs, top_k)
-        all_v = jax.lax.all_gather(v, axis).reshape(-1)
-        all_i = jax.lax.all_gather(idx[i_loc], axis).reshape(-1)
-        vv, ii = jax.lax.top_k(all_v, top_k)
-        return ShardedQAOAResult(all_i[ii], vv, exp)
+            _, res = jax.lax.scan(body, 0, (edges, weights))
+            return res
 
     run = compat.shard_map(
         local_run,
         mesh,
         in_specs=(P(), P(), P(), P()),
-        out_specs=ShardedQAOAResult(P(), P(), P()),
+        out_specs=ShardedQAOAResult(P(), P(), P(), P(), P()),
     )
     return compat.jit(run)
 
@@ -203,6 +195,8 @@ def sharded_qaoa(
     top_k: int = 4,
     schedule: str = "alternating",
     group: int = 7,
+    opt_steps: int = 0,
+    learning_rate: float = 0.05,
 ):
     """One n-qubit QAOA circuit with amplitudes sharded over `axis`.
 
@@ -211,9 +205,52 @@ def sharded_qaoa(
     slice [d·L + p·chunk, d·L + (p+1)·chunk)). In layout B the local flat
     index's high h bits are the *original* high qubits — so a full local
     mixer still touches each original qubit exactly once per layer.
+
+    ``gammas``/``betas`` are the run (or, with ``opt_steps`` > 0, the
+    initial) parameters; the sharded Adam ascent (`engine.sharded_ascent`,
+    DESIGN.md §2.6) then optimizes them through the collective schedule
+    before the final evolution. ``opt_steps=0`` runs them as given —
+    bit-identical to the pre-engine behavior.
     """
     program = _sharded_qaoa_program(
-        n, int(gammas.shape[0]), mesh, axis, top_k, schedule, group
+        n, int(gammas.shape[0]), 1, mesh, axis, top_k, schedule, group,
+        int(opt_steps), float(learning_rate), ops.get_implementation(),
+    )
+    return program(edges, weights, gammas, betas)
+
+
+def sharded_qaoa_batch(
+    edges,
+    weights,
+    n: int,
+    gammas,
+    betas,
+    mesh: Mesh,
+    axis: str = "model",
+    top_k: int = 4,
+    schedule: str = "alternating",
+    group: int = 7,
+    opt_steps: int = 0,
+    learning_rate: float = 0.05,
+):
+    """`sharded_qaoa` over a stacked batch of same-n subgraphs.
+
+    ``edges`` (B, E_pad, 2) / ``weights`` (B, E_pad) padded with
+    zero-weight rows (exact no-ops for the cut values); one cached
+    program `lax.scan`s the B subgraphs through the sharded engine.
+    Result fields carry a leading (B,) axis.
+    """
+    b = int(edges.shape[0])
+    if b == 1:  # singleton batch: reuse the (scan-free) unbatched program
+        res = sharded_qaoa(
+            edges[0], weights[0], n, gammas, betas, mesh, axis=axis,
+            top_k=top_k, schedule=schedule, group=group,
+            opt_steps=opt_steps, learning_rate=learning_rate,
+        )
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], res)
+    program = _sharded_qaoa_program(
+        n, int(gammas.shape[0]), b, mesh, axis, top_k, schedule, group,
+        int(opt_steps), float(learning_rate), ops.get_implementation(),
     )
     return program(edges, weights, gammas, betas)
 
@@ -314,9 +351,11 @@ def solve_distributed(
          (the sharded statevector holds what one device cannot);
       2. subgraphs that fit one device solve as a padded batch through the
          cached `solve_pool` program over the `data` (and `pod`) axes;
-         oversized subgraphs route one-by-one through `sharded_qaoa` over
-         `model` with `schedule`-selected collectives, at linear-ramp
-         parameters (DESIGN.md §2.2);
+         oversized subgraphs route, grouped by qubit count, through
+         batched `sharded_qaoa_batch` programs over `model` with
+         `schedule`-selected collectives — linear-ramp parameters when
+         ``cfg.sharded_opt_steps == 0``, per-subgraph Adam-ascended
+         through the sharded evolution otherwise (DESIGN.md §2.2, §2.6);
       3. the merge frontier stripes across the `data` axis at
          ``split_level`` (default: the paper's L knob,
          ``cfg.merge_level``) via `merge_sharded`; `global_winner`
@@ -375,13 +414,24 @@ def solve_distributed(
                 edges, weights, masks
             )
         bit_indices[small] = np.asarray(res.bitstrings)
+    # oversized subproblems: grouped by qubit count and run as stacked
+    # batches through one cached sharded-engine program per n (edge arrays
+    # padded with exact-no-op zero rows) — instead of one compile-shaped
+    # call per subgraph. With `sharded_opt_steps > 0` the linear-ramp
+    # initialization is Adam-ascended per subgraph *through* the sharded
+    # evolution (DESIGN.md §2.6); 0 runs the ramp as-is.
+    sharded_steps = int(getattr(cfg, "sharded_opt_steps", 0))
     gammas0, betas0 = qaoa_mod.linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
+    by_n: dict[int, list[int]] = {}
     for i in big:
-        sub = part.subgraphs[i]
-        res = sharded_qaoa(
-            sub.edges,
-            sub.weights,
-            sub.n,
+        by_n.setdefault(part.subgraphs[i].n, []).append(i)
+    for n_sub, idxs in sorted(by_n.items()):
+        subs = [part.subgraphs[i] for i in idxs]
+        b_edges, b_weights, _ = qaoa_mod.pad_subgraph_arrays(subs, n_sub)
+        res = sharded_qaoa_batch(
+            b_edges,
+            b_weights,
+            n_sub,
             gammas0,
             betas0,
             mesh,
@@ -389,8 +439,12 @@ def solve_distributed(
             top_k=cfg.top_k,
             schedule=schedule,
             group=qcfg.mixer_group,
+            opt_steps=sharded_steps,
+            learning_rate=cfg.learning_rate,
         )
-        bit_indices[i] = np.asarray(res.bitstrings).reshape(-1)[: cfg.top_k]
+        bit_indices[idxs] = (
+            np.asarray(res.bitstrings).reshape(len(idxs), -1)[:, : cfg.top_k]
+        )
     t_solve = time.perf_counter()
 
     # ---- stage 3: merge frontier (striped when the policy allows) --------
@@ -469,6 +523,7 @@ def solve_distributed(
             "merge_mode": merge_mode,
             "merge_per_shard_beam": per_shard,
             "sharded_subproblems": len(big),
+            "sharded_opt_steps": sharded_steps,
             "schedule": schedule,
             **timings,
         },

@@ -1,0 +1,315 @@
+"""One differentiable statevector engine under every QAOA solve path.
+
+Before this module existed the repo had two forks of the per-layer QAOA
+evolution: `qaoa.qaoa_statevector` (single-device, routed through
+`kernels.ops`) and a hand-rolled loop inside the sharded program
+(`ref.apply_phase` / `_mix_bits` einsums that the Pallas dispatch could
+never reach). This module is the merge point (DESIGN.md §2.6):
+
+  - `Layout` describes *where the amplitudes live*: `FlatLayout` (one
+    device, full 2^n vector) or `ShardedLayout` (2^n amplitudes sharded
+    over a mesh axis, with the `faithful`/`alternating` all_to_all
+    schedules of DESIGN.md §2.2 and the layout-A/layout-B index maps).
+  - `cut_table(layout, edges, weights)` materializes the diagonal cost
+    in every layout the schedule will visit.
+  - `evolve(layout, cut, gammas, betas)` runs the p-layer ansatz with
+    every op — phase, grouped mixer, cutvals-at-indices, expectation —
+    going through the `kernels.ops` dispatch, so `pallas` /
+    `pallas_interpret` / `xla` selection (including the fused
+    phase+mixer kernel, §Perf C3) applies identically per shard.
+  - the evolution is differentiable end to end: `all_to_all` is its own
+    transpose and the expectation's `psum` transposes to a broadcast,
+    so `jax.grad` through `evolve` matches the single-device gradient
+    (tests/test_distributed.py::test_engine_gradient_parity). That is
+    what `sharded_ascent` exploits to optimize oversized-subproblem
+    parameters instead of freezing them at the linear ramp.
+
+Layout-B geometry (also documented on `sharded_qaoa`): in layout A
+device d owns global indices [d·L, (d+1)·L); after the qubit-swap
+all_to_all (layout B) device p owns, for every d, the slice
+[d·L + p·chunk, d·L + (p+1)·chunk). In layout B the local flat index's
+bits [log2(chunk), log2(chunk)+h) are the *original* high h qubits, so
+one local `apply_mixer_bits` call mixes exactly the qubits that were
+out of reach in layout A (property-tested in tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Single-device layout: the full 2^n statevector in basis order."""
+
+    n: int
+    group: int = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout:
+    """Model-axis sharded layout. Only meaningful inside `shard_map` over
+    ``axis`` (the index maps call ``jax.lax.axis_index``)."""
+
+    n: int
+    axis: str
+    axis_size: int
+    schedule: str = "alternating"
+    group: int = 7
+
+    def __post_init__(self):
+        assert 2**self.h == self.axis_size, (
+            f"axis size {self.axis_size} must be a power of two"
+        )
+        assert self.chunk >= 1, (
+            f"statevector too small for the mesh: n={self.n}, "
+            f"axis={self.axis_size}"
+        )
+        assert self.schedule in ("faithful", "alternating"), self.schedule
+
+    @property
+    def h(self) -> int:
+        """Number of shard-axis ("global") qubits."""
+        return int(np.log2(self.axis_size))
+
+    @property
+    def n_local(self) -> int:
+        return self.n - self.h
+
+    @property
+    def local_dim(self) -> int:
+        """L — amplitudes resident per device."""
+        return 2**self.n_local
+
+    @property
+    def chunk(self) -> int:
+        """all_to_all block size: L / axis_size."""
+        return self.local_dim // self.axis_size
+
+    @property
+    def log2_chunk(self) -> int:
+        return int(np.log2(self.chunk))
+
+
+Layout = Union[FlatLayout, ShardedLayout]
+
+
+class CutTable(NamedTuple):
+    """Diagonal cost (and owned global indices) per layout position.
+
+    Flat layouts carry only ``cutv_a`` (basis order); sharded layouts
+    carry both layout-A and layout-B views so the alternating schedule
+    can evaluate the cost layer without swapping back (DESIGN.md §2.2).
+    """
+
+    cutv_a: jnp.ndarray
+    idx_a: jnp.ndarray | None
+    cutv_b: jnp.ndarray | None
+    idx_b: jnp.ndarray | None
+
+    def at(self, in_b: bool) -> jnp.ndarray:
+        return self.cutv_b if in_b else self.cutv_a
+
+    def idx(self, in_b: bool) -> jnp.ndarray:
+        return self.idx_b if in_b else self.idx_a
+
+
+def layout_index_maps(layout: ShardedLayout, device: int):
+    """Host-side (numpy) layout-A/B global-index rows for one device.
+
+    The traced `cut_table` below computes the same maps with
+    ``lax.axis_index``; this pure form exists so the layout geometry is
+    property-testable without a mesh (tests/test_engine.py).
+    """
+    L, chunk = layout.local_dim, layout.chunk
+    q = np.arange(L, dtype=np.int64)
+    idx_a = device * L + q
+    idx_b = (q // chunk) * L + device * chunk + (q % chunk)
+    return idx_a, idx_b
+
+
+def cut_table(layout: Layout, edges, weights) -> CutTable:
+    """Cut values of every owned basis state, in every layout visited."""
+    if isinstance(layout, FlatLayout):
+        return CutTable(ops.cutvals(layout.n, edges, weights), None, None, None)
+    L, chunk = layout.local_dim, layout.chunk
+    me = jax.lax.axis_index(layout.axis)
+    q = jnp.arange(L, dtype=jnp.int32)
+    idx_a = me * L + q
+    idx_b = (q // chunk) * L + me * chunk + (q % chunk)
+    # both views are built unconditionally; the faithful schedule never
+    # reads the B view and XLA dead-code-eliminates it
+    return CutTable(
+        ops.cutvals_at(idx_a, edges, weights),
+        idx_a,
+        ops.cutvals_at(idx_b, edges, weights),
+        idx_b,
+    )
+
+
+def init_state(layout: Layout):
+    """|+>^n as (re, im) planes — the locally-resident slice for shards."""
+    dim = 2**layout.n if isinstance(layout, FlatLayout) else layout.local_dim
+    re = jnp.full((dim,), 2.0 ** (-layout.n / 2), dtype=jnp.float32)
+    im = jnp.zeros((dim,), dtype=jnp.float32)
+    return re, im
+
+
+def _a2a(layout: ShardedLayout, x):
+    """The qubit-swap all_to_all: layout A <-> layout B (self-inverse)."""
+    return jax.lax.all_to_all(
+        x.reshape(layout.axis_size, layout.chunk),
+        layout.axis,
+        split_axis=0,
+        concat_axis=0,
+    ).reshape(-1)
+
+
+def evolve(layout: Layout, cut: CutTable, gammas, betas):
+    """Run the p-layer QAOA ansatz from |+>^n.
+
+    Returns ``(re, im, in_b)`` — the final state planes plus the (static)
+    layout position, ``True`` when the state ends in layout B (odd p
+    under the alternating schedule). Every op dispatches through
+    `kernels.ops`; differentiable w.r.t. (gammas, betas) on both layout
+    kinds under the `xla` dispatch path (the Pallas kernels carry no AD
+    rule — `sharded_ascent` pins its gradient trace accordingly).
+    """
+    re, im = init_state(layout)
+    if isinstance(layout, FlatLayout):
+
+        def layer(carry, gb):
+            re, im = carry
+            g, b = gb
+            re, im = ops.apply_layer(
+                re, im, cut.cutv_a, g, b, layout.n, group=layout.group
+            )
+            return (re, im), None
+
+        (re, im), _ = jax.lax.scan(layer, (re, im), (gammas, betas))
+        return re, im, False
+
+    in_b = False
+    for l in range(int(gammas.shape[0])):  # p is small; unrolled keeps the
+        g, b = gammas[l], betas[l]  # layout position static per layer
+        # phase + the n-h locally-resident qubits, one fused-dispatch layer
+        re, im = ops.apply_layer(
+            re, im, cut.at(in_b), g, b, layout.n_local, group=layout.group
+        )
+        # rotate the h shard-axis qubits into locality and mix them: after
+        # the swap they sit at local bits [log2_chunk, log2_chunk + h)
+        re, im = _a2a(layout, re), _a2a(layout, im)
+        re, im = ops.apply_mixer_bits(
+            re, im, layout.n_local, layout.log2_chunk, layout.h, b
+        )
+        if layout.schedule == "alternating":
+            in_b = not in_b
+        else:  # faithful: swap straight back to layout A
+            re, im = _a2a(layout, re), _a2a(layout, im)
+    return re, im, in_b
+
+
+def expectation(layout: Layout, re, im, cut: CutTable, in_b: bool = False):
+    """⟨cut⟩ of the evolved state; psummed to the global value on shards."""
+    e = ops.expectation(re, im, cut.at(in_b))
+    if isinstance(layout, ShardedLayout):
+        e = jax.lax.psum(e, layout.axis)
+    return e
+
+
+def top_candidates(layout: Layout, re, im, cut: CutTable, in_b: bool, k: int):
+    """Top-k (global basis indices, probabilities), replicated on shards."""
+    probs = re * re + im * im
+    if isinstance(layout, FlatLayout):
+        v, i = jax.lax.top_k(probs, k)
+        return i, v
+    idx = cut.idx(in_b)
+    v, i_loc = jax.lax.top_k(probs, k)
+    all_v = jax.lax.all_gather(v, layout.axis).reshape(-1)
+    all_i = jax.lax.all_gather(idx[i_loc], layout.axis).reshape(-1)
+    vv, ii = jax.lax.top_k(all_v, k)
+    return all_i[ii], vv
+
+
+# ---------------------------------------------------------------------------
+# parameter optimization
+# ---------------------------------------------------------------------------
+def adam_scan(grad_fn, params, steps: int, learning_rate: float):
+    """Adam descent on ``grad_fn`` for ``steps`` under one `lax.scan`.
+
+    The update rule shared by the single-device batched ascent
+    (`qaoa.optimize_params`) and the sharded ascent below — one source
+    of truth so the two optimizers cannot drift.
+    """
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    state = (params, zeros, zeros)
+
+    def step(state, i):
+        params, m, v = state
+        g = grad_fn(params)
+        m = jax.tree.map(lambda a, b: beta1 * a + (1 - beta1) * b, m, g)
+        v = jax.tree.map(lambda a, b: beta2 * a + (1 - beta2) * b * b, v, g)
+        t = i + 1
+        mh = jax.tree.map(lambda a: a / (1 - beta1**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - beta2**t), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - learning_rate * a / (jnp.sqrt(b) + eps),
+            params,
+            mh,
+            vh,
+        )
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(
+        step, state, jnp.arange(steps, dtype=jnp.float32)
+    )
+    return params
+
+
+def sharded_ascent(
+    layout: ShardedLayout,
+    cut: CutTable,
+    gammas,
+    betas,
+    steps: int,
+    learning_rate: float,
+):
+    """Adam ascent on the *global* ⟨cut⟩ through the sharded evolution.
+
+    The per-device loss is the local (unsummed) expectation; its gradient
+    is psummed, which equals the gradient of the psummed expectation —
+    d(Σ_d exp_d)/dθ = Σ_d d exp_d/dθ — without leaning on any particular
+    psum-transpose rule. Every device sees identical psummed gradients,
+    so the Adam moments stay replicated and the ascent is deterministic
+    across shards.
+
+    The *differentiated* evolution always traces the `xla` reference
+    path: the Pallas kernels carry no AD rule, so `jax.grad` through a
+    `pallas`/`pallas_interpret`-dispatched evolve would fail (a
+    `custom_vjp` on the kernels is a ROADMAP follow-up). Only this
+    ascent loop is pinned — the final measured evolution still runs
+    whatever implementation the caller selected.
+    """
+
+    def neg_local(params):
+        g, b = params
+        re, im, in_b = evolve(layout, cut, g, b)
+        return -ops.expectation(re, im, cut.at(in_b))
+
+    raw_grad = jax.grad(neg_local)
+
+    def grad_fn(params):
+        return jax.tree.map(
+            lambda x: jax.lax.psum(x, layout.axis), raw_grad(params)
+        )
+
+    with ops.using_implementation("xla"):  # dispatch is a trace-time choice
+        return adam_scan(grad_fn, (gammas, betas), steps, learning_rate)

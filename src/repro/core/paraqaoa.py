@@ -43,6 +43,10 @@ class ParaQAOAConfig:
     opt_steps: int = 30
     learning_rate: float = 0.05
     ramp_delta: float = 0.75
+    # Adam steps on oversized (model-axis sharded) subproblems, run
+    # *through* the sharded evolution (engine.sharded_ascent, DESIGN.md
+    # §2.6); 0 keeps the linear-ramp parameters — the pre-engine behavior
+    sharded_opt_steps: int = 0
     # beyond-paper: vectorized 1-flip local-search refinement of the merged cut
     refine_steps: int = 0
 

@@ -3,7 +3,9 @@
 Max-Cut's cost Hamiltonian is diagonal in the computational basis, so one
 QAOA layer is:  (1) an elementwise phase by the per-basis-state cut value,
 (2) the transverse-field mixer RX(2β)^{⊗n}, applied as grouped matmuls.
-Both steps run through `repro.kernels.ops` (Pallas on TPU, jnp on CPU).
+The evolution itself lives in `repro.core.engine` (DESIGN.md §2.6) — the
+same engine the sharded program runs per shard — with every op dispatched
+through `repro.kernels.ops` (Pallas on TPU, jnp on CPU).
 
 The classical outer loop (paper: per-subgraph scipy-style optimizers) is a
 *batched, differentiable* Adam ascent on ⟨H_C⟩ — all subgraphs optimize
@@ -21,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import engine
 from repro.core.graph import Graph
 from repro.kernels import ops
 
@@ -51,19 +54,15 @@ def linear_ramp_init(p: int, delta: float):
 
 
 def qaoa_statevector(cutv, n: int, gammas, betas, group: int = 7):
-    """Run the p-layer ansatz; returns (re, im) planes of the final state."""
-    dim = 2**n
-    re = jnp.full((dim,), 2.0 ** (-n / 2), dtype=jnp.float32)
-    im = jnp.zeros((dim,), dtype=jnp.float32)
+    """Run the p-layer ansatz; returns (re, im) planes of the final state.
 
-    def layer(carry, gb):
-        re, im = carry
-        g, b = gb
-        re, im = ops.apply_phase(re, im, cutv, g)
-        re, im = ops.apply_mixer(re, im, n, b, group=group)
-        return (re, im), None
-
-    (re, im), _ = jax.lax.scan(layer, (re, im), (gammas, betas))
+    A thin wrapper over the shared engine's `evolve` on a `FlatLayout` —
+    the identical per-layer code the sharded program runs per shard
+    (DESIGN.md §2.6).
+    """
+    layout = engine.FlatLayout(n=n, group=group)
+    cut = engine.CutTable(cutv, None, None, None)
+    re, im, _ = engine.evolve(layout, cut, gammas, betas)
     return re, im
 
 
@@ -74,37 +73,16 @@ def qaoa_expectation(params, cutv, n: int, group: int = 7):
 
 
 def optimize_params(cutv, n: int, cfg: QAOAConfig):
-    """Adam ascent on ⟨cut⟩. Returns optimized (gammas, betas)."""
+    """Adam ascent on ⟨cut⟩. Returns optimized (gammas, betas).
+
+    The update rule is the shared `engine.adam_scan` — the same scan the
+    sharded ascent runs per shard (DESIGN.md §2.6)."""
     g0, b0 = linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
-    params = (g0, b0)
 
     neg_obj = lambda p: -qaoa_expectation(p, cutv, n, group=cfg.mixer_group)
-    grad_fn = jax.grad(neg_obj)
-
-    beta1, beta2, eps = 0.9, 0.999, 1e-8
-    zeros = jax.tree.map(jnp.zeros_like, params)
-    state = (params, zeros, zeros)
-
-    def step(state, i):
-        params, m, v = state
-        g = grad_fn(params)
-        m = jax.tree.map(lambda a, b: beta1 * a + (1 - beta1) * b, m, g)
-        v = jax.tree.map(lambda a, b: beta2 * a + (1 - beta2) * b * b, v, g)
-        t = i + 1
-        mh = jax.tree.map(lambda a: a / (1 - beta1**t), m)
-        vh = jax.tree.map(lambda a: a / (1 - beta2**t), v)
-        params = jax.tree.map(
-            lambda p, a, b: p - cfg.learning_rate * a / (jnp.sqrt(b) + eps),
-            params,
-            mh,
-            vh,
-        )
-        return (params, m, v), None
-
-    (params, _, _), _ = jax.lax.scan(
-        step, state, jnp.arange(cfg.opt_steps, dtype=jnp.float32)
+    return engine.adam_scan(
+        jax.grad(neg_obj), (g0, b0), cfg.opt_steps, cfg.learning_rate
     )
-    return params
 
 
 def topk_marginal(re, im, n: int, real_mask, k: int):
@@ -151,9 +129,9 @@ def solve_subgraph_batch_program(cfg: QAOAConfig):
     distributed `solve_pool` wraps the *same* jitted computation in
     shard_map — the single-device and pool-parallel paths produce
     bit-identical candidates (XLA's eager op-by-op dispatch rounds
-    differently from the fused program; 25 Adam steps on a non-convex
-    landscape amplify that last-ulp difference into different top-k
-    picks).
+    differently from the fused program; the default 30 Adam steps
+    (``QAOAConfig.opt_steps``) on a non-convex landscape amplify that
+    last-ulp difference into different top-k picks).
     """
     return jax.jit(lambda e, w, m: solve_subgraph_batch(e, w, m, cfg))
 

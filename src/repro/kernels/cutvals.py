@@ -87,6 +87,61 @@ def cutvals(n: int, edges, weights, *, interpret: bool = False):
     return out.reshape(dim)
 
 
+def _at_kernel(ei_ref, ej_ref, w_ref, idx_ref, out_ref):
+    """Like `_kernel`/`_small_kernel` but the basis indices come from an
+    input block instead of the grid position — the sharded-statevector
+    case, where each device owns an arbitrary slice/permutation of the
+    amplitude space (DESIGN.md §2.6)."""
+    ke = pl.program_id(1)
+    idx = idx_ref[...].reshape(-1, 1)  # (tile, 1)
+    ei = ei_ref[...].reshape(1, -1)
+    ej = ej_ref[...].reshape(1, -1)
+    w = w_ref[...].reshape(-1, 1)
+    crossed = ((idx >> ei) ^ (idx >> ej)) & 1
+    partial = jnp.dot(
+        crossed.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ke == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(ke != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cutvals_at(idx, edges, weights, *, interpret: bool = False):
+    """Cut values at arbitrary basis indices: (M,) f32 for (M,) int32 idx."""
+    m = idx.shape[0]
+    e = edges.shape[0]
+    e_pad = max(EDGE_CHUNK, ((e + EDGE_CHUNK - 1) // EDGE_CHUNK) * EDGE_CHUNK)
+    ei = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 0])
+    ej = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 1])
+    w = jnp.zeros((e_pad,), jnp.float32).at[:e].set(weights)
+
+    tile = min(TILE_B, m)
+    m_pad = ((m + tile - 1) // tile) * tile
+    idx_p = jnp.zeros((m_pad, 1), jnp.int32).at[:m, 0].set(idx)
+
+    chunk_spec = pl.BlockSpec((EDGE_CHUNK,), lambda kb, ke: (ke,))
+    out = pl.pallas_call(
+        _at_kernel,
+        grid=(m_pad // tile, e_pad // EDGE_CHUNK),
+        in_specs=[
+            chunk_spec,
+            chunk_spec,
+            chunk_spec,
+            pl.BlockSpec((tile, 1), lambda kb, ke: (kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda kb, ke: (kb, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(ei, ej, w, idx_p)
+    return out.reshape(m_pad)[:m]
+
+
 def _small_kernel(tile, ei_ref, ej_ref, w_ref, out_ref):
     ke = pl.program_id(1)
     row = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)

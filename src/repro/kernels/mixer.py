@@ -81,27 +81,35 @@ def mixer_group_matmul(re_mat, im_mat, beta, k: int, *, interpret: bool = False)
     return ore, oim
 
 
-def apply_mixer(re, im, n: int, beta, group: int = 7, *, interpret: bool = False):
-    """Full mixer via grouped kernel calls.
+def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta, *,
+                     interpret: bool = False):
+    """RX(2β)^{⊗nbits} on qubits [lo_bit, lo_bit+nbits) of a flat 2^n state.
 
-    The wrapper owns the (X, 2^k, Y) → (X·Y, 2^k) relayouts between groups;
-    XLA lowers them to on-chip relayout copies. Fusing the transpose into
-    the kernel is tracked as a §Perf candidate.
+    The wrapper owns the (X, 2^k, Y) → (X·Y, 2^k) relayout around the
+    kernel call; XLA lowers it to on-chip relayout copies. Fusing the
+    transpose into the kernel is tracked as a §Perf candidate.
     """
+    k = nbits
+    x = 2 ** (n - lo_bit - k)
+    y = 2**lo_bit
+    re3 = re.reshape(x, 2**k, y)
+    im3 = im.reshape(x, 2**k, y)
+    if y == 1:
+        re_m, im_m = re3.reshape(x, 2**k), im3.reshape(x, 2**k)
+        re_m, im_m = mixer_group_matmul(re_m, im_m, beta, k, interpret=interpret)
+        return re_m.reshape(-1), im_m.reshape(-1)
+    re_m = jnp.moveaxis(re3, 1, 2).reshape(x * y, 2**k)
+    im_m = jnp.moveaxis(im3, 1, 2).reshape(x * y, 2**k)
+    re_m, im_m = mixer_group_matmul(re_m, im_m, beta, k, interpret=interpret)
+    re = jnp.moveaxis(re_m.reshape(x, y, 2**k), 2, 1).reshape(-1)
+    im = jnp.moveaxis(im_m.reshape(x, y, 2**k), 2, 1).reshape(-1)
+    return re, im
+
+
+def apply_mixer(re, im, n: int, beta, group: int = 7, *, interpret: bool = False):
+    """Full mixer via grouped `apply_mixer_bits` kernel calls."""
     for g0 in range(0, n, group):
-        k = min(group, n - g0)
-        x = 2 ** (n - g0 - k)
-        y = 2**g0
-        re3 = re.reshape(x, 2**k, y)
-        im3 = im.reshape(x, 2**k, y)
-        if y == 1:
-            re_m, im_m = re3.reshape(x, 2**k), im3.reshape(x, 2**k)
-            re_m, im_m = mixer_group_matmul(re_m, im_m, beta, k, interpret=interpret)
-            re, im = re_m.reshape(-1), im_m.reshape(-1)
-        else:
-            re_m = jnp.moveaxis(re3, 1, 2).reshape(x * y, 2**k)
-            im_m = jnp.moveaxis(im3, 1, 2).reshape(x * y, 2**k)
-            re_m, im_m = mixer_group_matmul(re_m, im_m, beta, k, interpret=interpret)
-            re = jnp.moveaxis(re_m.reshape(x, y, 2**k), 2, 1).reshape(-1)
-            im = jnp.moveaxis(im_m.reshape(x, y, 2**k), 2, 1).reshape(-1)
+        re, im = apply_mixer_bits(
+            re, im, n, g0, min(group, n - g0), beta, interpret=interpret
+        )
     return re, im

@@ -13,6 +13,7 @@ truth for each op's semantics.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -27,6 +28,22 @@ def set_implementation(impl: str) -> None:
     global _IMPL
     assert impl in ("auto", "xla", "pallas", "pallas_interpret"), impl
     _IMPL = impl
+
+
+@contextlib.contextmanager
+def using_implementation(impl: str):
+    """Scoped implementation override: restores the previous selection on
+    exit (even on error). Dispatch happens at *trace* time, so programs
+    cached outside the context keep whatever implementation they were
+    traced under — cached-program builders that must honor the override
+    include `get_implementation()` in their cache key."""
+    global _IMPL
+    prev = _IMPL
+    set_implementation(impl)
+    try:
+        yield
+    finally:
+        _IMPL = prev
 
 
 def get_implementation() -> str:
@@ -53,6 +70,15 @@ def cutvals(n: int, edges, weights):
     return ref.cutvals(n, edges, weights)
 
 
+def cutvals_at(idx, edges, weights):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import cutvals as k
+
+        return k.cutvals_at(idx, edges, weights, interpret=p["interpret"])
+    return ref.cutvals_at(idx, edges, weights)
+
+
 def apply_phase(re, im, cutv, gamma):
     p = _pallas()
     if p["use"]:
@@ -68,6 +94,54 @@ def apply_mixer(re, im, n: int, beta, group: int = 7):
         from repro.kernels import mixer as k
 
         return k.apply_mixer(re, im, n, beta, group=group, interpret=p["interpret"])
+    return ref.apply_mixer(re, im, n, beta, group=group)
+
+
+def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import mixer as k
+
+        return k.apply_mixer_bits(
+            re, im, n, lo_bit, nbits, beta, interpret=p["interpret"]
+        )
+    return ref.apply_mixer_bits(re, im, n, lo_bit, nbits, beta)
+
+
+def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
+    """One full intra-shard QAOA layer: cost phase, then the n-qubit mixer.
+
+    This is the op the statevector engine (core/engine.py, DESIGN.md §2.6)
+    runs per layer on every path — flat or per-shard. On the Pallas path
+    the phase and the *first* mixer group go through the fused
+    `kernels/fused_layer.py` kernel (one VMEM round-trip, §Perf C3) and
+    the remaining groups through the mixer kernel; the XLA path is the
+    exact phase-then-mixer reference decomposition.
+    """
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import fused_layer as fl
+        from repro.kernels import mixer as mk
+
+        k = min(group, n)
+        dk = 2**k
+        re_m, im_m = fl.fused_phase_mixer_group(
+            re.reshape(-1, dk),
+            im.reshape(-1, dk),
+            cutv.reshape(-1, dk),
+            gamma,
+            beta,
+            k,
+            interpret=p["interpret"],
+        )
+        re, im = re_m.reshape(-1), im_m.reshape(-1)
+        for g0 in range(k, n, group):
+            re, im = mk.apply_mixer_bits(
+                re, im, n, g0, min(group, n - g0), beta,
+                interpret=p["interpret"],
+            )
+        return re, im
+    re, im = ref.apply_phase(re, im, cutv, gamma)
     return ref.apply_mixer(re, im, n, beta, group=group)
 
 

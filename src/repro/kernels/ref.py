@@ -87,21 +87,29 @@ def rx_kron_parts(beta, k: int):
     return mag * rfac, mag * ifac
 
 
+def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
+    """RX(2β)^{⊗nbits} on qubits [lo_bit, lo_bit+nbits) of a flat 2^n state.
+
+    One grouped unitary: a (2^nbits, 2^nbits) real-pair contraction over a
+    reshaped view that exposes the target qubits on the contracted axis.
+    The building block of both the full mixer below and the sharded
+    engine's post-all_to_all global-qubit mix (DESIGN.md §2.6).
+    """
+    C, D = rx_kron_parts(beta, nbits)
+    shape = (2 ** (n - lo_bit - nbits), 2**nbits, 2**lo_bit)
+    re3, im3 = re.reshape(shape), im.reshape(shape)
+    re_new = jnp.einsum("ab,xby->xay", C, re3) - jnp.einsum("ab,xby->xay", D, im3)
+    im_new = jnp.einsum("ab,xby->xay", C, im3) + jnp.einsum("ab,xby->xay", D, re3)
+    return re_new.reshape(-1), im_new.reshape(-1)
+
+
 def apply_mixer(re, im, n: int, beta, group: int = 7):
     """Full transverse-field mixer U_M(beta) = prod_q e^{-i beta X_q}.
 
-    Applied as ceil(n/group) grouped unitaries; each group is a
-    (2^k, 2^k) real-pair matmul over a reshaped view that exposes qubits
-    [g0, g0+k) on the contracted axis.
+    Applied as ceil(n/group) grouped unitaries via `apply_mixer_bits`.
     """
     for g0 in range(0, n, group):
-        k = min(group, n - g0)
-        C, D = rx_kron_parts(beta, k)
-        shape = (2 ** (n - g0 - k), 2**k, 2**g0)
-        re3, im3 = re.reshape(shape), im.reshape(shape)
-        re_new = jnp.einsum("ab,xby->xay", C, re3) - jnp.einsum("ab,xby->xay", D, im3)
-        im_new = jnp.einsum("ab,xby->xay", C, im3) + jnp.einsum("ab,xby->xay", D, re3)
-        re, im = re_new.reshape(-1), im_new.reshape(-1)
+        re, im = apply_mixer_bits(re, im, n, g0, min(group, n - g0), beta)
     return re, im
 
 

@@ -55,6 +55,10 @@ def build_parser() -> argparse.ArgumentParser:
                     default="alternating",
                     help="collective schedule for model-axis sharded "
                     "subproblems: 2 vs 1 all_to_all per layer")
+    ap.add_argument("--sharded-opt-steps", type=int, default=0,
+                    help="Adam steps on oversized (model-sharded) "
+                    "subproblem parameters, optimized through the sharded "
+                    "evolution (DESIGN.md §2.6); 0 keeps the linear ramp")
     ap.add_argument("--merge", choices=("auto", "striped", "single"),
                     default="auto", dest="merge_mode",
                     help="distributed merge policy: 'auto' stripes the "
@@ -99,6 +103,7 @@ def run(argv=None):
         n_qubits=args.qubits, top_k=args.k, p_layers=args.layers,
         opt_steps=args.opt_steps, beam_width=args.beam,
         refine_steps=args.refine,
+        sharded_opt_steps=args.sharded_opt_steps,
     )
     if mesh_spec is not None:
         out = solve_distributed(
@@ -109,7 +114,8 @@ def run(argv=None):
         print(f"[maxcut] mesh {extra['mesh']}: "
               f"{extra['merge_shards']} merge shards "
               f"({extra['merge_mode']}), "
-              f"{extra['sharded_subproblems']} model-sharded subproblems")
+              f"{extra['sharded_subproblems']} model-sharded subproblems "
+              f"(sharded_opt_steps={extra['sharded_opt_steps']})")
     else:
         out = solve(graph, cfg)
     print(f"[maxcut] cut = {out.cut_value:.0f}  "

@@ -15,6 +15,7 @@ EXPECTED_FILES = {
     "BENCH_schedules.json",
     "BENCH_distributed.json",
     "BENCH_service.json",
+    "BENCH_sharded_engine.json",
 }
 
 ENVELOPE_KEYS = {"suite", "jax_version", "backend", "device_count", "rows"}
@@ -67,6 +68,23 @@ def test_rows(path):
             assert _DERIVED.match(derived), (
                 f"{where}: derived {derived!r} is not ';'-separated k=v"
             )
+
+
+def test_sharded_engine_rows_carry_quality_claim():
+    """The engine suite must record the fused-vs-unfused layer pair and
+    the opt-vs-ramp quality row with its ⟨cut⟩_opt >= ⟨cut⟩_ramp claim
+    (the sharded-ascent acceptance criterion, DESIGN.md §2.6)."""
+    path = RESULTS / "BENCH_sharded_engine.json"
+    payload = json.loads(path.read_text())
+    names = {r["name"] for r in payload["rows"]}
+    assert any(n.startswith("sharded_engine/layer_fused_") for n in names)
+    assert any(n.startswith("sharded_engine/layer_unfused_") for n in names)
+    quality = [r for r in payload["rows"] if "opt_ge_ramp" in r]
+    assert quality, "missing sharded_engine/opt_vs_ramp_* row"
+    for row in quality:
+        assert row["opt_ge_ramp"] is True
+        derived = dict(kv.split("=") for kv in row["derived"].split(";"))
+        assert float(derived["exp_opt"]) >= float(derived["exp_ramp"])
 
 
 def test_service_rows_carry_load_metrics():

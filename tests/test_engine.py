@@ -1,0 +1,157 @@
+"""Statevector-engine invariants testable without a device mesh
+(DESIGN.md §2.6): layout-B geometry (relabeling + global-qubit mix),
+flat-path equivalence against the dense oracle, the shared Adam scan,
+and the no-direct-`ref.*` contract of the sharded hot loop."""
+
+import inspect
+import re as regex
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distributed as dist
+from repro.core import engine
+from repro.core.graph import Graph
+from repro.kernels import ref
+
+
+def _layout(h: int, log2_chunk: int) -> engine.ShardedLayout:
+    """Smallest-n layout with the requested shard geometry: n_local is
+    h (the post-swap global-qubit block) + log2_chunk (the a2a block)."""
+    n_local = h + log2_chunk
+    return engine.ShardedLayout(
+        n=n_local + h, axis="model", axis_size=2**h
+    )
+
+
+# ------------------------------------------------------ layout-B geometry --
+@given(h=st.integers(1, 3), log2_chunk=st.integers(0, 4),
+       seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_layout_b_is_a_relabeling(h, log2_chunk, seed):
+    """The union of per-device layout-B index rows is a permutation of the
+    basis — so evaluating the diagonal cost in layout B is a pure
+    relabeling (the alternating schedule's correctness condition), and
+    the layout-B cut table is the layout-A table gathered through it."""
+    lay = _layout(h, log2_chunk)
+    g = Graph.erdos_renyi(lay.n, 0.5, seed=seed)
+    cutv = np.asarray(ref.cutvals(lay.n, g.edges, g.weights))
+    seen = []
+    for dev in range(lay.axis_size):
+        idx_a, idx_b = engine.layout_index_maps(lay, dev)
+        assert idx_a.shape == idx_b.shape == (lay.local_dim,)
+        seen.append(idx_b)
+        np.testing.assert_array_equal(
+            np.asarray(
+                ref.cutvals_at(jnp.asarray(idx_b, jnp.int32), g.edges,
+                               g.weights)
+            ),
+            cutv[idx_b],
+        )
+    flat = np.concatenate(seen)
+    np.testing.assert_array_equal(np.sort(flat), np.arange(2**lay.n))
+
+
+@given(h=st.integers(1, 3), log2_chunk=st.integers(0, 3),
+       seed=st.integers(0, 8))
+@settings(max_examples=25, deadline=None)
+def test_layout_b_local_mix_is_global_qubit_mix(h, log2_chunk, seed):
+    """In layout B the local bits [log2_chunk, log2_chunk+h) are the
+    original high h qubits: a *local* `apply_mixer_bits` there equals the
+    global mixer on qubits [n_local, n) — the property that lets the
+    sharded engine mix the shard-axis qubits without further collectives."""
+    lay = _layout(h, log2_chunk)
+    n = lay.n
+    rng = np.random.default_rng(seed)
+    s_re = rng.normal(size=2**n).astype(np.float32)
+    s_im = rng.normal(size=2**n).astype(np.float32)
+    beta = jnp.float32(0.3 + 0.1 * seed)
+
+    want_re, want_im = ref.apply_mixer_bits(
+        jnp.asarray(s_re), jnp.asarray(s_im), n, lay.n_local, lay.h, beta
+    )
+
+    got_re = np.zeros_like(s_re)
+    got_im = np.zeros_like(s_im)
+    for dev in range(lay.axis_size):
+        # the qubit-swap all_to_all delivers exactly s[idx_b] to device dev
+        _, idx_b = engine.layout_index_maps(lay, dev)
+        lre, lim = ref.apply_mixer_bits(
+            jnp.asarray(s_re[idx_b]),
+            jnp.asarray(s_im[idx_b]),
+            lay.n_local,
+            lay.log2_chunk,
+            lay.h,
+            beta,
+        )
+        got_re[idx_b] = np.asarray(lre)
+        got_im[idx_b] = np.asarray(lim)
+
+    np.testing.assert_allclose(got_re, np.asarray(want_re), atol=2e-6)
+    np.testing.assert_allclose(got_im, np.asarray(want_im), atol=2e-6)
+
+
+# ------------------------------------------------------- flat-path parity --
+@pytest.mark.parametrize("n,p", [(5, 1), (6, 2)])
+def test_flat_evolve_matches_dense_oracle(n, p):
+    g = Graph.erdos_renyi(n, 0.5, seed=n)
+    cutv = ref.cutvals(n, g.edges, g.weights)
+    gammas = jnp.linspace(0.2, 0.7, p).astype(jnp.float32)
+    betas = jnp.linspace(0.8, 0.3, p).astype(jnp.float32)
+
+    layout = engine.FlatLayout(n=n)
+    cut = engine.CutTable(cutv, None, None, None)
+    re, im, in_b = engine.evolve(layout, cut, gammas, betas)
+    assert in_b is False
+
+    psi = jnp.full((2**n,), 2.0 ** (-n / 2), dtype=jnp.complex64)
+    for l in range(p):
+        psi = ref.dense_qaoa_layer(psi, cutv, float(gammas[l]),
+                                   float(betas[l]), n)
+    np.testing.assert_allclose(np.asarray(re), np.asarray(psi.real),
+                               atol=3e-6)
+    np.testing.assert_allclose(np.asarray(im), np.asarray(psi.imag),
+                               atol=3e-6)
+
+
+def test_flat_evolve_is_qaoa_statevector():
+    """`qaoa.qaoa_statevector` is the engine's FlatLayout path — bitwise."""
+    from repro.core import qaoa as qaoa_mod
+
+    n = 7
+    g = Graph.erdos_renyi(n, 0.4, seed=1)
+    cutv = ref.cutvals(n, g.edges, g.weights)
+    gammas, betas = qaoa_mod.linear_ramp_init(3, 0.75)
+    re1, im1 = qaoa_mod.qaoa_statevector(cutv, n, gammas, betas)
+    cut = engine.CutTable(cutv, None, None, None)
+    re2, im2, _ = engine.evolve(engine.FlatLayout(n=n), cut, gammas, betas)
+    np.testing.assert_array_equal(np.asarray(re1), np.asarray(re2))
+    np.testing.assert_array_equal(np.asarray(im1), np.asarray(im2))
+
+
+# ------------------------------------------------------------- adam_scan --
+def test_adam_scan_minimizes_quadratic():
+    grad_fn = jax.grad(lambda p: jnp.sum((p[0] - 3.0) ** 2))
+    (x,) = engine.adam_scan(grad_fn, (jnp.zeros((2,)),), 200, 0.1)
+    np.testing.assert_allclose(np.asarray(x), 3.0, atol=1e-2)
+
+
+# ------------------------------------------- hot-loop dispatch contract --
+def test_sharded_hot_loop_has_no_direct_ref_calls():
+    """Acceptance contract: every op in the sharded hot loop goes through
+    the `kernels.ops` dispatch — no `ref.*` escapes it (the runtime half
+    of this contract is tests/test_distributed.py's
+    `test_engine_ops_dispatch_per_shard`)."""
+    for fn in (dist._sharded_qaoa_program, engine.evolve,
+               engine.cut_table, engine.expectation,
+               engine.sharded_ascent):
+        src = inspect.getsource(fn)
+        assert not regex.search(r"\bref\.", src), fn
+    assert not regex.search(
+        r"^\s*from repro\.kernels import .*\bref\b",
+        inspect.getsource(dist),
+        flags=regex.M,
+    ), "core/distributed.py must not import kernels.ref"

@@ -170,17 +170,99 @@ def test_cutbatch_agrees_with_edge_list_eval():
     np.testing.assert_allclose(got, want, rtol=1e-5)
 
 
+# ------------------------------------------------------------ cutvals_at --
+@pytest.mark.parametrize("n,m", [(6, 64), (10, 1000), (12, 5000)])
+def test_cutvals_at_kernel_matches_ref(n, m):
+    # arbitrary (shuffled, non-tile-multiple) basis indices — the sharded
+    # layout-A/B gather pattern
+    g = _graph(n, 0.5, seed=n)
+    rng = np.random.default_rng(m)
+    idx = jnp.asarray(rng.integers(0, 2**n, size=m), jnp.int32)
+    want = ref.cutvals_at(idx, g.edges, g.weights)
+    got = cutvals.cutvals_at(idx, g.edges, g.weights, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_cutvals_at_full_range_equals_cutvals():
+    n = 9
+    g = _graph(n, 0.4, seed=2)
+    idx = jnp.arange(2**n, dtype=jnp.int32)
+    got = cutvals.cutvals_at(idx, g.edges, g.weights, interpret=True)
+    want = cutvals.cutvals(n, g.edges, g.weights, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------------- apply_mixer_bits --
+@pytest.mark.parametrize("n,lo,k", [(8, 0, 3), (8, 2, 3), (9, 4, 5), (10, 3, 7)])
+def test_mixer_bits_kernel_matches_ref(n, lo, k):
+    key = jax.random.PRNGKey(n * 100 + lo)
+    k1, k2 = jax.random.split(key)
+    dim = 2**n
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    beta = jnp.float32(0.7)
+    wr, wi = ref.apply_mixer_bits(re, im, n, lo, k, beta)
+    gr, gi = mixer.apply_mixer_bits(re, im, n, lo, k, beta, interpret=True)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-5)
+
+
+def test_mixer_bits_composition_is_full_mixer():
+    # chaining apply_mixer_bits over all groups == apply_mixer (ref oracle)
+    n, group = 9, 4
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    re = jax.random.normal(k1, (2**n,), jnp.float32)
+    im = jax.random.normal(k2, (2**n,), jnp.float32)
+    beta = jnp.float32(1.1)
+    wr, wi = ref.apply_mixer(re, im, n, beta, group=group)
+    gr, gi = re, im
+    for g0 in range(0, n, group):
+        gr, gi = ref.apply_mixer_bits(gr, gi, n, g0, min(group, n - g0), beta)
+    np.testing.assert_array_equal(np.asarray(gr), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
 # ------------------------------------------------- ops dispatch integrity --
 def test_ops_dispatch_pallas_interpret_equals_xla():
     from repro.kernels import ops
 
     n = 8
     g = _graph(n, 0.5, seed=0)
-    try:
-        ops.set_implementation("xla")
+    with ops.using_implementation("xla"):
         c_x = np.asarray(ops.cutvals(n, g.edges, g.weights))
-        ops.set_implementation("pallas_interpret")
+    with ops.using_implementation("pallas_interpret"):
         c_p = np.asarray(ops.cutvals(n, g.edges, g.weights))
-    finally:
-        ops.set_implementation("auto")
+    assert ops.get_implementation() != "pallas_interpret"  # restored on exit
     np.testing.assert_allclose(c_p, c_x, rtol=1e-6)
+
+
+def test_using_implementation_restores_on_error():
+    from repro.kernels import ops
+
+    before = ops.get_implementation()
+    with pytest.raises(RuntimeError):
+        with ops.using_implementation("pallas_interpret"):
+            raise RuntimeError("boom")
+    assert ops.get_implementation() == before
+
+
+def test_ops_apply_layer_dispatch_matches_xla():
+    """The engine's per-layer op: the pallas_interpret path (fused
+    phase+first-group kernel + grouped mixer kernels) must agree with
+    the XLA reference decomposition."""
+    from repro.kernels import ops
+
+    n, group = 9, 4
+    g = _graph(n, 0.5, seed=9)
+    cutv = ref.cutvals(n, g.edges, g.weights)
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    re = jax.random.normal(k1, (2**n,), jnp.float32)
+    im = jax.random.normal(k2, (2**n,), jnp.float32)
+    with ops.using_implementation("xla"):
+        wr, wi = ops.apply_layer(re, im, cutv, 0.4, 0.9, n, group=group)
+    with ops.using_implementation("pallas_interpret"):
+        gr, gi = ops.apply_layer(re, im, cutv, 0.4, 0.9, n, group=group)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(wr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-5)
