@@ -15,6 +15,18 @@ to their sequential twins (the §6.1 parity contract). Writes
 p50/p99 latency per mode and load, speedup, cache-hit and batch-fill
 ratios. `--smoke` is the tiny CI variant (emulated devices are irrelevant
 here — the service is a single-process scheduler).
+
+`--distributed` (§Perf C8) instead exercises the §6.5 backends on an
+emulated `data` mesh: the same mix through the single-device
+`LocalBackend` and through `MeshBackend` (`solve_pool` over the mesh),
+asserting bit-identical per-request cuts across backends *and* against
+solo `core.solve` (`cut_equal`), plus a sync-vs-async admission pair
+(`max_inflight` 1 vs 4) at the highest load. Writes
+`results/BENCH_service_mesh.json`. Recalibration is pinned off
+throughout: in the parity runs so both backends plan identically, and
+in the async pair so both loops do identical work (refits are
+timing-dependent, so leaving it on would measure the planner, not the
+loop).
 """
 
 from __future__ import annotations
@@ -27,16 +39,11 @@ from benchmarks.common import emit, write_bench_json
 from repro.core import ParaQAOAConfig, solve
 from repro.core.graph import Graph
 from repro.service import SLA, Planner, ServiceConfig, SolveService
-from repro.service.workload import request_mix
+from repro.service.workload import request_mix, tenant_mix
 
 
 def _cfg_from_plan(plan) -> ParaQAOAConfig:
-    kn = plan.knobs
-    return ParaQAOAConfig(
-        n_qubits=kn.n_qubits, top_k=kn.top_k, merge_level=plan.merge_level,
-        p_layers=kn.p_layers, opt_steps=kn.opt_steps,
-        beam_width=kn.beam_width,
-    )
+    return plan.to_config()
 
 
 def _latency_row(name, mode, load, wall, latencies, **extra):
@@ -84,9 +91,12 @@ def run(loads=(1, 2, 4, 8), n_range=(40, 100), p=0.15, seed=0,
             f"service/seq_load{load}", "sequential", load, seq_wall, seq_lat,
         ))
 
-        # ---- batched service (fresh instance per load point) -------------
+        # ---- batched service (fresh instance per load point; the planner
+        # is shared with the sequential baseline, so recalibration is off
+        # to keep the two modes' knob choices identical) ------------------
         svc = SolveService(
-            ServiceConfig(batch_slots=batch_slots, max_qubits=max_qubits),
+            ServiceConfig(batch_slots=batch_slots, max_qubits=max_qubits,
+                          recalibrate=False),
             planner=planner,
         )
         t0 = time.perf_counter()
@@ -127,10 +137,144 @@ def run(loads=(1, 2, 4, 8), n_range=(40, 100), p=0.15, seed=0,
     return rows
 
 
+def _service_run(graphs, labels, sla, *, mesh=None, max_inflight=2,
+                 recalibrate=False, batch_slots=16, max_qubits=10):
+    svc = SolveService(ServiceConfig(
+        batch_slots=batch_slots, max_qubits=max_qubits, mesh=mesh,
+        max_inflight=max_inflight, recalibrate=recalibrate,
+    ))
+    t0 = time.perf_counter()
+    rids = [svc.submit(g, sla, tenant=t) for g, t in zip(graphs, labels)]
+    svc.drain()
+    wall = time.perf_counter() - t0
+    return svc, rids, wall
+
+
+def run_distributed(loads=(2, 4, 8), mesh_devices=4, n_range=(40, 100),
+                    p=0.15, seed=0, repeat_frac=0.25, deadline_s=20.0,
+                    batch_slots=16, max_qubits=10, async_reps=2, save=True):
+    """§6.5 backend + async-admission load curve → BENCH_service_mesh.json.
+
+    Requires ``mesh_devices`` visible jax devices (the `__main__` hook
+    arranges CPU emulation before the backend initializes).
+    """
+    import jax
+
+    assert jax.device_count() >= mesh_devices, (
+        f"need {mesh_devices} devices (run via __main__, which emulates)"
+    )
+    mesh = f"data={mesh_devices}"
+    sla = SLA(deadline_s=deadline_s)
+    kw = dict(batch_slots=batch_slots, max_qubits=max_qubits)
+
+    # absorb one-time compile noise for both backends
+    warm_planner = Planner(max_qubits=max_qubits, batch_slots=batch_slots)
+    warm = Graph.erdos_renyi(n_range[0], p, seed=seed + 999)
+    _service_run([warm], ["t0"], sla, **kw)
+    _service_run([warm], ["t0"], sla, mesh=mesh, **kw)
+    solve(warm, _cfg_from_plan(warm_planner.plan(warm.n, warm.n_edges, sla)))
+
+    rows = []
+    for load in loads:
+        graphs = request_mix(load, n_range, p, repeat_frac, seed)
+        labels = tenant_mix(load, 2, seed)
+
+        svc_l, rids_l, wall_l = _service_run(graphs, labels, sla, **kw)
+        svc_m, rids_m, wall_m = _service_run(graphs, labels, sla, mesh=mesh,
+                                             **kw)
+        rows.append(_latency_row(
+            f"service_mesh/local_load{load}", "local", load, wall_l,
+            [svc_l.results[r].latency_s for r in rids_l],
+            fill_ratio=round(svc_l.stats.fill_ratio, 4),
+            dispatches=svc_l.stats.dispatches,
+            devices=1,
+        ))
+        rows.append(_latency_row(
+            f"service_mesh/mesh_load{load}", "mesh", load, wall_m,
+            [svc_m.results[r].latency_s for r in rids_m],
+            fill_ratio=round(svc_m.stats.fill_ratio, 4),
+            dispatches=svc_m.stats.dispatches,
+            devices=svc_m.backend.describe()["devices"],
+        ))
+
+        # ---- the §6.5 parity contract ------------------------------------
+        cut_equal = True
+        for g, rl, rm in zip(graphs, rids_l, rids_m):
+            ra, rb = svc_l.results[rl], svc_m.results[rm]
+            cut_equal &= bool(
+                ra.cut_value == rb.cut_value
+                and np.array_equal(ra.assignment, rb.assignment)
+            )
+            if not ra.cached:  # and against solo core.solve on its knobs
+                solo = solve(g, _cfg_from_plan(ra.plan))
+                cut_equal &= bool(ra.cut_value == solo.cut_value)
+        rows.append({
+            "name": f"service_mesh/parity_load{load}",
+            "runtime_s": 0.0,
+            "derived": (
+                f"cut_equal={cut_equal};"
+                f"mesh_over_local={wall_l / wall_m if wall_m else 0:.3f}x"
+            ),
+            "load": load,
+            "cut_equal": cut_equal,
+            "mesh_over_local": wall_l / wall_m if wall_m else 0.0,
+        })
+
+    # ---- async admission vs the PR 3-style synchronous loop --------------
+    # max_inflight=1 reproduces the closed pump (dispatch, block, merge);
+    # the async window overlaps host packing/merging with device batches.
+    # Recalibration off so both loops plan identical knobs — with it on,
+    # timing-dependent refits give the two runs different work and the
+    # comparison measures the planner, not the loop.
+    load = max(loads)
+    graphs = request_mix(load, n_range, p, repeat_frac, seed)
+    labels = tenant_mix(load, 2, seed)
+    sync_wall = min(
+        _service_run(graphs, labels, sla, max_inflight=1, **kw)[2]
+        for _ in range(async_reps)
+    )
+    async_wall = min(
+        _service_run(graphs, labels, sla, max_inflight=4, **kw)[2]
+        for _ in range(async_reps)
+    )
+    sync_tput = load / sync_wall if sync_wall else 0.0
+    async_tput = load / async_wall if async_wall else 0.0
+    ratio = async_tput / sync_tput if sync_tput else float("inf")
+    rows.append({
+        "name": f"service_mesh/async_vs_sync_load{load}",
+        "runtime_s": async_wall,
+        "derived": (
+            f"async={async_tput:.3f}rps;sync={sync_tput:.3f}rps;"
+            f"ratio={ratio:.3f}x"
+        ),
+        "load": load,
+        "async_throughput_rps": async_tput,
+        "sync_throughput_rps": sync_tput,
+        "async_over_sync": ratio,
+        "async_ge_sync": bool(ratio >= 1.0),
+    })
+
+    if save and rows:
+        path = write_bench_json("service_mesh", rows)
+        print(f"# wrote {path}")
+    return rows
+
+
 if __name__ == "__main__":
     import sys
 
-    if "--smoke" in sys.argv:
+    if "--distributed" in sys.argv:
+        # emulate the mesh *before* the first jax backend touch
+        from repro import compat
+
+        compat.ensure_host_device_count(4)
+        if "--smoke" in sys.argv:
+            emit(run_distributed(loads=(2, 4), n_range=(24, 40), p=0.2,
+                                 deadline_s=10.0, batch_slots=8,
+                                 max_qubits=8, async_reps=1, save=False))
+        else:
+            emit(run_distributed())
+    elif "--smoke" in sys.argv:
         emit(run(loads=(1, 4), n_range=(24, 40), p=0.2, deadline_s=10.0,
                  batch_slots=8, save=False))
     else:

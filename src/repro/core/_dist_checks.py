@@ -344,6 +344,57 @@ def check_solve_distributed():
     return out
 
 
+def check_service_mesh():
+    """Service-backend parity (DESIGN.md §6.5): the same request mix
+    through the single-device `LocalBackend` and through `MeshBackend`
+    (solve_pool over an emulated 4-device `data` mesh) must produce
+    bit-identical per-request cuts and assignments — and non-cached
+    requests must stay bit-identical to solo `core.solve` on their own
+    planned knobs. Recalibration is pinned off so both services plan
+    identically (knob choice is time-dependent with it on)."""
+    from repro.core import paraqaoa as para_mod
+    from repro.service import SLA, ServiceConfig, SolveService
+    from repro.service.workload import request_mix, tenant_mix
+
+    graphs = request_mix(6, (30, 60), 0.2, 0.25, seed=3)
+    tenants = tenant_mix(6, 2, seed=3)
+    sla = SLA(deadline_s=20.0)
+
+    def run_service(mesh):
+        svc = SolveService(ServiceConfig(
+            batch_slots=8, max_qubits=8, mesh=mesh, max_inflight=2,
+            recalibrate=False,
+        ))
+        rids = [svc.submit(g, sla, tenant=t)
+                for g, t in zip(graphs, tenants)]
+        svc.drain()
+        return svc, rids
+
+    svc_l, rids_l = run_service(None)
+    svc_m, rids_m = run_service("data=4")
+
+    out = {"backends_parity": True, "solo_parity": True}
+    for g, rl, rm in zip(graphs, rids_l, rids_m):
+        ra, rb = svc_l.results[rl], svc_m.results[rm]
+        out["backends_parity"] &= bool(
+            ra.cut_value == rb.cut_value
+            and np.array_equal(ra.assignment, rb.assignment)
+        )
+        if not ra.cached:
+            solo = para_mod.solve(g, ra.plan.to_config())
+            out["solo_parity"] &= bool(ra.cut_value == solo.cut_value)
+    out["mesh_backend_engaged"] = bool(
+        svc_m.backend.describe()["devices"] == 4
+        and svc_m.stats.dispatches > 0
+    )
+    out["tenants_accounted"] = bool(
+        set(svc_m.stats.tenants) == set(tenants)
+        and sum(t.completed for t in svc_m.stats.tenants.values()) == 6
+    )
+    out["async_window_used"] = bool(svc_m.stats.max_inflight_seen >= 2)
+    return out
+
+
 def main():
     checks = {
         "solve_pool": check_solve_pool,
@@ -352,6 +403,7 @@ def main():
         "engine_grad": check_engine_grad,
         "engine_interpret": check_engine_interpret,
         "solve_distributed": check_solve_distributed,
+        "service_mesh": check_service_mesh,
     }
     which = sys.argv[1] if len(sys.argv) > 1 else ""
     if which not in checks:

@@ -60,12 +60,18 @@ from repro.kernels import ops
 # ---------------------------------------------------------------------------
 @compat.cached_program
 def _solve_pool_program(
-    cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool
+    cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool, impl: str
 ):
+    # the per-shard `kernels.ops` dispatch is a trace-time choice, so
+    # `ops.using_implementation` only reaches the pool if each
+    # implementation gets its own compiled program; the keyed `impl` is
+    # re-asserted during tracing because jit traces lazily on first call,
+    # possibly outside the context the program was requested under
     spec = P(axes)
 
     def run(e, w, mk):
-        return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
+        with ops.using_implementation(impl):
+            return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
 
     sharded = compat.shard_map(
         run,
@@ -102,7 +108,9 @@ def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
     # normalize the cache key on non-donating backends: donate=True and
     # donate=False would otherwise compile byte-identical programs twice
     donate = bool(pad) and compat.supports_donation()
-    program = _solve_pool_program(cfg, mesh, axes, donate)
+    program = _solve_pool_program(
+        cfg, mesh, axes, donate, ops.get_implementation()
+    )
     res = program(edges, weights, masks)
     return jax.tree.map(lambda x: x[:m], res)
 
@@ -137,13 +145,15 @@ def _sharded_qaoa_program(
     ``batch`` > 1 runs a `lax.scan` over stacked same-n subgraphs — one
     compiled program for the whole oversized-subproblem group instead of
     one compile-shaped call per subgraph. ``impl`` is the `kernels.ops`
-    implementation the program was traced under: dispatch happens at
-    trace time, so it must be part of the cache key for
+    implementation the program runs: dispatch happens at trace time, so
+    it is part of the cache key *and* re-asserted inside the traced
+    function (jit traces lazily on first call, possibly outside the
+    context the program was requested under) for
     `ops.using_implementation` to reach the per-shard kernels.
     """
-    # cache-key-only params: `impl` is read by the ops dispatch at trace
-    # time; `p_layers` (like array shapes) is re-handled by jit's own cache
-    del impl, p_layers
+    # `p_layers` is cache-key-only (like array shapes, re-handled by
+    # jit's own cache)
+    del p_layers
     layout = engine.ShardedLayout(
         n=n,
         axis=axis,
@@ -175,8 +185,12 @@ def _sharded_qaoa_program(
             _, res = jax.lax.scan(body, 0, (edges, weights))
             return res
 
+    def local_run_impl(edges, weights, gammas, betas):
+        with ops.using_implementation(impl):
+            return local_run(edges, weights, gammas, betas)
+
     run = compat.shard_map(
-        local_run,
+        local_run_impl,
         mesh,
         in_specs=(P(), P(), P(), P()),
         out_specs=ShardedQAOAResult(P(), P(), P(), P(), P()),

@@ -76,13 +76,17 @@ def optimize_params(cutv, n: int, cfg: QAOAConfig):
     """Adam ascent on ⟨cut⟩. Returns optimized (gammas, betas).
 
     The update rule is the shared `engine.adam_scan` — the same scan the
-    sharded ascent runs per shard (DESIGN.md §2.6)."""
+    sharded ascent runs per shard (DESIGN.md §2.6). Like
+    `engine.sharded_ascent`, the *differentiated* evolution is pinned to
+    the `xla` dispatch path (the Pallas kernels carry no AD rule); the
+    final measured evolution still runs the caller's implementation."""
     g0, b0 = linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
 
     neg_obj = lambda p: -qaoa_expectation(p, cutv, n, group=cfg.mixer_group)
-    return engine.adam_scan(
-        jax.grad(neg_obj), (g0, b0), cfg.opt_steps, cfg.learning_rate
-    )
+    with ops.using_implementation("xla"):  # dispatch is a trace-time choice
+        return engine.adam_scan(
+            jax.grad(neg_obj), (g0, b0), cfg.opt_steps, cfg.learning_rate
+        )
 
 
 def topk_marginal(re, im, n: int, real_mask, k: int):
@@ -121,6 +125,25 @@ solve_subgraph_batch = jax.vmap(solve_subgraph, in_axes=(0, 0, 0, None))
 
 
 @compat.cached_program
+def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str):
+    """Impl-keyed builder behind `solve_subgraph_batch_program`.
+
+    The `kernels.ops` dispatch reads the active implementation at
+    *trace* time, so two impls must map to two compiled programs for
+    `ops.using_implementation` to reach this path (the same contract
+    `_sharded_qaoa_program` keeps, DESIGN.md §2.6). The keyed ``impl``
+    is re-asserted inside the traced function: jit traces lazily on
+    first call, which may happen outside the context the program was
+    requested under — the key and the traced dispatch must not disagree.
+    """
+
+    def run(e, w, m):
+        with ops.using_implementation(impl):
+            return solve_subgraph_batch(e, w, m, cfg)
+
+    return jax.jit(run)
+
+
 def solve_subgraph_batch_program(cfg: QAOAConfig):
     """Cached whole-batch jit of `solve_subgraph_batch` for one config.
 
@@ -131,9 +154,10 @@ def solve_subgraph_batch_program(cfg: QAOAConfig):
     bit-identical candidates (XLA's eager op-by-op dispatch rounds
     differently from the fused program; the default 30 Adam steps
     (``QAOAConfig.opt_steps``) on a non-convex landscape amplify that
-    last-ulp difference into different top-k picks).
+    last-ulp difference into different top-k picks). The underlying
+    cache keys on (config, active `kernels.ops` implementation).
     """
-    return jax.jit(lambda e, w, m: solve_subgraph_batch(e, w, m, cfg))
+    return _solve_subgraph_batch_program(cfg, ops.get_implementation())
 
 
 def index_to_bits(indices: jnp.ndarray, n: int) -> jnp.ndarray:

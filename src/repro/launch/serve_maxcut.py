@@ -4,6 +4,13 @@ scheduler (DESIGN.md §6).
   PYTHONPATH=src python -m repro.launch.serve_maxcut --requests 8 \
       --n-min 40 --n-max 120 --deadline 30 --repeat-frac 0.25
 
+  # route the packed buckets through solve_pool over a 4-device `data`
+  # mesh (emulated on a single-CPU host, like solve_maxcut --mesh)
+  PYTHONPATH=src python -m repro.launch.serve_maxcut --requests 8 --mesh data=4
+
+  # two tenants with skewed traffic: per-tenant fairness accounting
+  PYTHONPATH=src python -m repro.launch.serve_maxcut --requests 8 --tenants 2
+
   # anytime streaming: print the best-known cut after every merge level
   PYTHONPATH=src python -m repro.launch.serve_maxcut --requests 2 --stream
 """
@@ -46,6 +53,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="hardware qubit budget cap for the SLA planner")
     ap.add_argument("--batch", type=int, default=16,
                     help="solver batch slots per dispatch (cross-request)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="SPEC",
+                    help="route packed buckets through solve_pool over this "
+                    "device mesh, e.g. 'data=4' (axes: pod/data; cuts stay "
+                    "bit-identical to the single-device service). On a "
+                    "single-CPU host the devices are emulated "
+                    "(docs/TESTING.md). Omit for the single-device backend")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="number of tenants the request mix is (skew-)"
+                    "assigned to; the dispatcher round-robins slots across "
+                    "tenants and reports per-tenant stats")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="solver batches in flight before the event loop "
+                    "blocks on the oldest (async admission window)")
+    ap.add_argument("--no-recalibrate", action="store_true",
+                    help="freeze the planner's cost model at the committed "
+                    "benchmark fit instead of streaming served-request "
+                    "timings back into it")
     ap.add_argument("--cache-capacity", type=int, default=256,
                     help="result-cache entries (LRU beyond this)")
     ap.add_argument("--no-cache", action="store_true",
@@ -59,13 +83,31 @@ def build_parser() -> argparse.ArgumentParser:
 def run(argv=None):
     args = build_parser().parse_args(argv)
 
+    mesh_spec = None
+    if args.mesh:
+        # parse + emulate *before* the first jax backend touch (graph
+        # construction below creates device arrays)
+        from repro import compat
+        from repro.launch.mesh import mesh_spec_size, parse_mesh_spec
+
+        mesh_spec = parse_mesh_spec(args.mesh)
+        need = mesh_spec_size(mesh_spec)
+        have = compat.ensure_host_device_count(need)
+        if have < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices but the jax "
+                f"backend is already up with {have}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}"
+            )
+
     from repro.service import SLA, ServiceConfig, SolveService
-    from repro.service.workload import request_mix
+    from repro.service.workload import request_mix, tenant_mix
 
     requests = request_mix(
         args.requests, (args.n_min, args.n_max), args.p,
         args.repeat_frac, args.seed,
     )
+    tenants = tenant_mix(args.requests, args.tenants, args.seed)
 
     svc = SolveService(
         ServiceConfig(
@@ -73,6 +115,9 @@ def run(argv=None):
             cache_capacity=args.cache_capacity,
             enable_cache=not args.no_cache,
             max_qubits=args.qubits,
+            mesh=mesh_spec,
+            max_inflight=args.max_inflight,
+            recalibrate=not args.no_recalibrate,
         )
     )
     sla = SLA(deadline_s=args.deadline, target_quality=args.target_quality)
@@ -84,8 +129,9 @@ def run(argv=None):
     t0 = time.perf_counter()
     rids = [
         svc.submit(g, sla, stream=args.stream,
-                   on_update=on_update if args.stream else None)
-        for g in requests
+                   on_update=on_update if args.stream else None,
+                   tenant=tenant)
+        for g, tenant in zip(requests, tenants)
     ]
     svc.drain()
     wall = time.perf_counter() - t0
@@ -96,15 +142,19 @@ def run(argv=None):
         src = "cache" if r.cached else (
             f"N={kn.n_qubits} K={kn.top_k} T={kn.opt_steps} W={kn.beam_width}"
         )
-        print(f"[serve_maxcut] req {rid}: n={g.n} cut={r.cut_value:.0f} "
-              f"latency={r.latency_s:.2f}s ({src})")
+        print(f"[serve_maxcut] req {rid} ({r.tenant}): n={g.n} "
+              f"cut={r.cut_value:.0f} latency={r.latency_s:.2f}s ({src})")
 
     lat = sorted(r.latency_s for r in svc.results.values())
     p50 = lat[len(lat) // 2]
     print(f"[serve_maxcut] {len(rids)} requests in {wall:.2f}s "
           f"({len(rids) / wall:.2f} req/s), p50 latency {p50:.2f}s")
+    print(f"[serve_maxcut] backend: {svc.backend.describe()}")
     print(f"[serve_maxcut] batching: {svc.stats.as_dict()}")
     print(f"[serve_maxcut] cache: {svc.cache.stats.as_dict()}")
+    if not args.no_recalibrate:
+        print(f"[serve_maxcut] recalibration: "
+              f"{svc.planner.calibration.as_dict()}")
     return svc
 
 

@@ -1,10 +1,14 @@
-"""Max-Cut solve service: cross-request batching, SLA-driven knob
-selection, and a canonical-graph result cache (DESIGN.md §6)."""
+"""Max-Cut solve service: cross-request batching over pluggable solver
+backends (single-device or `solve_pool` over a `data` mesh), async
+admission with per-tenant fairness, SLA-driven knob selection with online
+recalibration, and a canonical-graph result cache (DESIGN.md §6)."""
 
+from repro.service.backend import LocalBackend, MeshBackend, make_backend
 from repro.service.cache import CacheStats, ResultCache
 from repro.service.canonical import CanonicalForm, canonical_form, canonical_key
 from repro.service.planner import (
     SLA,
+    CalibrationStats,
     CostModel,
     KnobPlan,
     KnobTuple,
@@ -16,16 +20,21 @@ from repro.service.scheduler import (
     ServiceConfig,
     ServiceStats,
     SolveService,
+    TenantStats,
     edge_capacity,
 )
 
 __all__ = [
+    "LocalBackend",
+    "MeshBackend",
+    "make_backend",
     "CacheStats",
     "ResultCache",
     "CanonicalForm",
     "canonical_form",
     "canonical_key",
     "SLA",
+    "CalibrationStats",
     "CostModel",
     "KnobPlan",
     "KnobTuple",
@@ -35,5 +44,6 @@ __all__ = [
     "ServiceConfig",
     "ServiceStats",
     "SolveService",
+    "TenantStats",
     "edge_capacity",
 ]

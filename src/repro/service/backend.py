@@ -1,0 +1,96 @@
+"""Pluggable solver backends for the solve service (DESIGN.md §6.5).
+
+The scheduler's packing logic is backend-agnostic: it builds fixed-shape
+`batch_slots`-row buckets and hands them to a backend's `solve_batch`.
+
+  - `LocalBackend` runs the single-device cached jitted
+    `qaoa.solve_subgraph_batch_program` — PR 3's original path.
+  - `MeshBackend` routes the *same* padded batch through
+    `core.distributed.solve_pool` over a device mesh's `data`/`pod` axes
+    — the paper's N_s-solver pool as the service's execution engine.
+    Because `solve_pool` wraps the identical jitted computation in
+    `shard_map` (and both program caches key on the active `kernels.ops`
+    implementation), the per-row candidates — and therefore every
+    request's cut — are bit-identical across backends
+    (`core._dist_checks check_service_mesh`, `cut_equal` in
+    `results/BENCH_service_mesh.json`).
+
+Backends return *unmaterialized* device results: jax dispatch is
+asynchronous, so the scheduler can keep admitting and dispatching while
+earlier batches are still in flight and only blocks when it harvests
+(`np.asarray`) the oldest one (DESIGN.md §6.5).
+"""
+
+from __future__ import annotations
+
+from repro import compat
+from repro.core import qaoa as qaoa_mod
+
+
+class LocalBackend:
+    """Single-device batched solver: the cached jitted batch program."""
+
+    name = "local"
+
+    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks):
+        return qaoa_mod.solve_subgraph_batch_program(qcfg)(
+            edges, weights, masks
+        )
+
+    def describe(self) -> dict:
+        return {"backend": self.name, "devices": 1}
+
+
+class MeshBackend:
+    """Batches routed through `solve_pool` over a `data` mesh.
+
+    ``mesh_spec`` is anything `core.distributed.as_mesh` resolves: a
+    `jax.sharding.Mesh`, a parsed ``{"data": 4}`` dict, or a
+    ``"data=4"`` CLI string. The mesh must expose at least one
+    batch-shardable (`data`/`pod`) axis; on a single-CPU host arrange
+    device emulation (`compat.ensure_host_device_count`) *before* jax
+    initializes, exactly as `launch/serve_maxcut.py --mesh` does.
+    """
+
+    name = "mesh"
+
+    def __init__(self, mesh_spec):
+        from repro.core import distributed as dist
+
+        self._dist = dist
+        self.mesh = dist.as_mesh(mesh_spec)
+        if self.mesh is None or not self.mesh.shape:
+            raise ValueError(f"MeshBackend needs a non-empty mesh: {mesh_spec!r}")
+        self.axes = compat.mesh_data_axes(self.mesh)
+        if not self.axes:
+            raise ValueError(
+                f"mesh {dict(self.mesh.shape)} has no data/pod axis to "
+                "shard the solver pool over"
+            )
+
+    @property
+    def n_devices(self) -> int:
+        total = 1
+        for a in self.axes:
+            total *= int(self.mesh.shape[a])
+        return total
+
+    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks):
+        return self._dist.solve_pool(
+            edges, weights, masks, qcfg, self.mesh, axes=self.axes
+        )
+
+    def describe(self) -> dict:
+        return {
+            "backend": self.name,
+            "mesh": dict(self.mesh.shape),
+            "axes": list(self.axes),
+            "devices": self.n_devices,
+        }
+
+
+def make_backend(mesh_spec=None):
+    """`ServiceConfig.mesh` → backend: None keeps the local program."""
+    if mesh_spec is None:
+        return LocalBackend()
+    return MeshBackend(mesh_spec)

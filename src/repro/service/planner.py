@@ -14,6 +14,15 @@ never select a slower-predicted tuple (proved by `tests/test_service.py`).
 Quality is a monotone proxy score over the knobs (the paper's Figs. 9-10
 trends: cut quality rises with K, beam/L, N, and optimizer steps), shared
 with the result cache's equal-or-better-quality gate (§6.3).
+
+The committed `BENCH_distributed.json` fit is only the *prior*: the
+scheduler streams served-request stage timings back through
+`observe_partition` / `observe_solve` / `observe_merge`, each an
+exponentially weighted blend of the implied per-work-unit coefficient
+into the live `CostModel` (DESIGN.md §6.5). Selection monotonicity is
+structural — it holds for any non-negative coefficient values, so it
+survives every refit — and a planner that never observes keeps its
+fitted model bit-for-bit (both proved in tests/test_service.py).
 """
 
 from __future__ import annotations
@@ -56,6 +65,23 @@ class KnobPlan(NamedTuple):
     quality: float
     meets_deadline: bool
     meets_quality: bool
+
+    def to_config(self):
+        """`ParaQAOAConfig` for this plan — the single knob→config
+        mapping shared by the scheduler, the benches, and every
+        service-vs-solo parity check (so a new knob field cannot be
+        silently dropped from one of them)."""
+        from repro.core import paraqaoa  # service→core only, no cycle
+
+        kn = self.knobs
+        return paraqaoa.ParaQAOAConfig(
+            n_qubits=kn.n_qubits,
+            top_k=kn.top_k,
+            merge_level=self.merge_level,
+            p_layers=kn.p_layers,
+            opt_steps=kn.opt_steps,
+            beam_width=kn.beam_width,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,8 +230,35 @@ DEFAULT_GRID: tuple = tuple(
 )
 
 
+@dataclasses.dataclass
+class CalibrationStats:
+    """Streaming-refit bookkeeping: how many served-request observations
+    have been blended into each stage coefficient."""
+
+    partition_obs: int = 0
+    solve_obs: int = 0
+    merge_obs: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.partition_obs + self.solve_obs + self.merge_obs
+
+    def as_dict(self) -> dict:
+        return {
+            "partition_obs": self.partition_obs,
+            "solve_obs": self.solve_obs,
+            "merge_obs": self.merge_obs,
+        }
+
+
 class Planner:
-    """Maps (graph size, SLA) → the knob tuple the scheduler should run."""
+    """Maps (graph size, SLA) → the knob tuple the scheduler should run.
+
+    ``recalibrate_alpha`` is the exponential weight of the streaming
+    refit: each `observe_*` call blends the observed per-work-unit
+    coefficient as ``c ← (1-α)·c + α·obs``. With zero observations the
+    cost model stays bit-for-bit the fitted prior.
+    """
 
     def __init__(
         self,
@@ -214,6 +267,7 @@ class Planner:
         max_qubits: int | None = None,
         default_merge_level: int = 2,
         batch_slots: int | None = None,
+        recalibrate_alpha: float = 0.25,
     ):
         self.cost_model = cost_model or CostModel.from_bench_file(
             DEFAULT_BENCH_PATH
@@ -230,6 +284,63 @@ class Planner:
             raise ValueError("empty knob grid")
         self.grid = list(grid)
         self.default_merge_level = default_merge_level
+        if not 0.0 < recalibrate_alpha <= 1.0:
+            raise ValueError(f"recalibrate_alpha out of (0, 1]: {recalibrate_alpha}")
+        self.recalibrate_alpha = recalibrate_alpha
+        self.base_model = self.cost_model  # the pre-refit fitted prior
+        self.calibration = CalibrationStats()
+
+    # ------------------------------------------------- streaming refit --
+    def _blend(self, field: str, observed: float) -> None:
+        """One EW refit step of a single coefficient; clamps at >= 0 so
+        selection monotonicity (structural over non-negative coefficients)
+        survives arbitrary observation streams."""
+        obs = max(float(observed), 0.0)
+        a = self.recalibrate_alpha
+        cur = getattr(self.cost_model, field)
+        self.cost_model = dataclasses.replace(
+            self.cost_model, **{field: (1.0 - a) * cur + a * obs}
+        )
+
+    def observe_partition(
+        self, n_vertices: int, n_edges: int, seconds: float
+    ) -> None:
+        """Blend one measured host-partition time into `c_partition`."""
+        self.calibration.partition_obs += 1
+        self._blend("c_partition", seconds / max(n_edges + n_vertices, 1))
+
+    def observe_solve(
+        self,
+        n_qubits: int,
+        p_layers: int,
+        opt_steps: int,
+        slots: int,
+        seconds: float,
+    ) -> None:
+        """Blend one measured batch-dispatch time into `c_solve`.
+
+        ``slots`` is the dispatched row count (padding rows run the full
+        computation, so they count as work); the model's per-dispatch
+        overhead term is subtracted before normalizing.
+        """
+        work = slots * (opt_steps + 1) * p_layers * 2**n_qubits
+        self.calibration.solve_obs += 1
+        self._blend(
+            "c_solve",
+            max(seconds - self.cost_model.c_dispatch, 0.0) / max(work, 1),
+        )
+
+    def observe_merge(
+        self, knobs: KnobTuple, m: int, n_edges: int, seconds: float
+    ) -> None:
+        """Blend one measured per-request merge time into `c_merge`."""
+        work = knobs.beam_width * knobs.top_k * max(n_edges, 1)
+        self.calibration.merge_obs += 1
+        self._blend(
+            "c_merge",
+            max(seconds - self.cost_model.c_merge_base * m, 0.0)
+            / max(work, 1),
+        )
 
     def plan(self, n_vertices: int, n_edges: int, sla: SLA = SLA()) -> KnobPlan:
         """Pick knobs for one request.

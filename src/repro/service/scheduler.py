@@ -1,19 +1,28 @@
-"""Cross-request batching Max-Cut solve service (DESIGN.md §6.1).
+"""Cross-request batching Max-Cut solve service (DESIGN.md §6.1, §6.5).
 
 The paper's pipeline solves one problem per invocation; the ROADMAP north
 star is a service under concurrent load. The scheduler closes that gap by
 amortizing solver capacity *across* requests:
 
-  1. `submit` admits a request, consults the result cache (§6.3) on the
-     canonical graph hash, and — on a miss — asks the SLA planner (§6.2)
-     for a knob tuple, partitions via `core.partition.partition_for_solver`
-     at the chosen qubit budget, and enqueues one work item per subgraph;
-  2. `pump` packs pending subgraphs from *any* request into fixed-shape
-     batches for the already-cached jitted `solve_subgraph_batch_program`.
-     Batches are shape-bucketed by the QAOA config: every dispatch in a
-     bucket uses exactly ``batch_slots`` rows padded to the qubit budget's
-     edge capacity N·(N−1)/2 — the maximum a ≤N-vertex subgraph can carry
-     — so a bucket compiles exactly once no matter how request sizes mix;
+  1. `submit` places a request on the admission queue. Admission consults
+     the result cache (§6.3) on the canonical graph hash, and — on a miss
+     — asks the SLA planner (§6.2) for a knob tuple, partitions via
+     `core.partition.partition_for_solver` at the chosen qubit budget, and
+     enqueues one work item per subgraph;
+  2. the dispatcher packs pending subgraphs from *any* request (and any
+     tenant) into fixed-shape batches for the configured solver backend
+     (§6.5): the single-device cached `solve_subgraph_batch_program`, or
+     `core.distributed.solve_pool` over a `data` mesh. Batches are
+     shape-bucketed by the QAOA config: every dispatch in a bucket uses
+     exactly ``batch_slots`` rows padded to the qubit budget's edge
+     capacity N·(N−1)/2 — the maximum a ≤N-vertex subgraph can carry —
+     so a bucket compiles exactly once no matter how request sizes mix.
+     Dispatch is *asynchronous*: jax returns unmaterialized device
+     results, so up to ``max_inflight`` batches overlap with admission
+     and with each other; the loop only blocks when it harvests the
+     oldest in-flight batch. Everything stays a deterministic
+     single-thread event loop — "concurrent" means many admitted
+     requests and in-flight batches, never racing threads;
   3. per-request completion tracking (mirroring `serving/engine.py`'s done
      mask, here a remaining-subgraph count) fires the merge stage the
      moment a request's last candidate lands: the default path runs
@@ -24,9 +33,16 @@ amortizing solver capacity *across* requests:
      `core.merge.merge_stream` and surface the best-known cut after every
      merge level (§6.4).
 
-Everything is synchronous SPMD-style pumping, not threads: "concurrent"
-means many admitted requests in flight across the shared batch queue,
-exactly like the decode engine's continuous batching.
+Multi-tenant fairness (§6.5): when a bucket holds more waiting subgraphs
+than one dispatch can take, slots are filled round-robin across tenants
+(optionally capped per tenant under contention), and any bucket whose
+oldest item has waited ``max_wait_dispatches`` dispatches pre-empts the
+fullest-bucket heuristic — so no request starves behind a heavier
+tenant's traffic (bounded-delay property, tests/test_service_stress.py).
+
+Served-request stage timings stream back into the planner's cost model
+(`Planner.observe_*`, §6.5) so knob selection tracks the hardware the
+service actually runs on, not the shipped benchmark fit.
 """
 
 from __future__ import annotations
@@ -44,6 +60,7 @@ from repro.core import paraqaoa as para_mod
 from repro.core import qaoa as qaoa_mod
 from repro.core.graph import Graph, cut_value
 from repro.core.partition import partition_for_solver
+from repro.service.backend import make_backend
 from repro.service.cache import ResultCache
 from repro.service.canonical import canonical_form
 from repro.service.planner import SLA, KnobPlan, Planner
@@ -61,6 +78,15 @@ class ServiceConfig:
     enable_cache: bool = True
     max_qubits: int = 12  # hardware budget cap handed to the planner
     anytime_min_levels: int = 2  # stream only when the merge has >1 level
+    # §6.5 backend: None → single-device program; a mesh spec (string /
+    # dict / Mesh) routes batches through solve_pool over its data axes
+    mesh: object = None
+    # §6.5 async admission loop
+    max_inflight: int = 2  # dispatched-but-unharvested batches
+    max_wait_dispatches: int = 4  # anti-starvation pre-emption bound
+    tenant_max_slots: int | None = None  # per-tenant slot cap under contention
+    # §6.5 online recalibration: stream stage timings into the planner
+    recalibrate: bool = True
 
 
 @dataclasses.dataclass
@@ -73,10 +99,13 @@ class RequestResult:
     latency_s: float
     timings: dict
     anytime: list  # [(level, n_levels, best_known_cut)] for streamed requests
+    tenant: str = "default"
+    dispatches_waited: int = 0  # dispatches between admission and completion
 
 
 class _Request:
-    def __init__(self, rid, graph, sla, plan, cfg, stream, on_update, form):
+    def __init__(self, rid, graph, sla, plan, cfg, stream, on_update, form,
+                 tenant):
         self.id = rid
         self.graph = graph
         self.sla = sla
@@ -85,11 +114,47 @@ class _Request:
         self.stream = stream
         self.on_update = on_update
         self.form = form  # canonical form, when the cache is enabled
+        self.tenant = tenant
         self.submit_t = time.perf_counter()
         self.part = None
         self.bit_indices = None  # (M, K) int64
         self.remaining = 0
         self.solve_done_t = None
+        self.admit_dispatch = 0  # stats.dispatches at admission
+
+
+class _Item:
+    """One queued subgraph: request, its subgraph index, enqueue stamp."""
+
+    __slots__ = ("req", "idx", "enq_dispatch")
+
+    def __init__(self, req, idx, enq_dispatch):
+        self.req = req
+        self.idx = idx
+        self.enq_dispatch = enq_dispatch
+
+
+class _Batch:
+    """One dispatched (possibly still in-flight) solver batch."""
+
+    __slots__ = ("qcfg", "items", "result", "t_issue")
+
+    def __init__(self, qcfg, items, result, t_issue):
+        self.qcfg = qcfg
+        self.items = items
+        self.result = result  # unmaterialized device arrays
+        self.t_issue = t_issue
+
+
+@dataclasses.dataclass
+class TenantStats:
+    submitted: int = 0
+    completed: int = 0
+    cache_served: int = 0
+    slots: int = 0  # solver slots this tenant's subgraphs occupied
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -99,6 +164,15 @@ class ServiceStats:
     slots_filled: int = 0
     completed: int = 0
     cache_served: int = 0
+    admitted: int = 0
+    preemptions: int = 0  # anti-starvation bucket picks
+    max_inflight_seen: int = 0
+    tenants: dict = dataclasses.field(default_factory=dict)
+
+    def tenant(self, name: str) -> TenantStats:
+        if name not in self.tenants:
+            self.tenants[name] = TenantStats()
+        return self.tenants[name]
 
     @property
     def fill_ratio(self) -> float:
@@ -112,6 +186,10 @@ class ServiceStats:
             "fill_ratio": round(self.fill_ratio, 4),
             "completed": self.completed,
             "cache_served": self.cache_served,
+            "admitted": self.admitted,
+            "preemptions": self.preemptions,
+            "max_inflight_seen": self.max_inflight_seen,
+            "tenants": {t: s.as_dict() for t, s in self.tenants.items()},
         }
 
 
@@ -123,23 +201,31 @@ class SolveService:
         config: ServiceConfig = ServiceConfig(),
         planner: Planner | None = None,
         cache: ResultCache | None = None,
+        backend=None,
     ):
         self.config = config
         self.planner = planner or Planner(
             max_qubits=config.max_qubits, batch_slots=config.batch_slots
         )
         self.cache = cache or ResultCache(config.cache_capacity)
+        self.backend = backend or make_backend(config.mesh)
         self.stats = ServiceStats()
         self.results: "OrderedDict[int, RequestResult]" = OrderedDict()
         self._next_id = 0
         self._active: dict[int, _Request] = {}
+        # admission queue: submitted-but-not-admitted requests, drained by
+        # `submit` (eager default) or at the top of every `pump` tick
+        self._admission: deque = deque()
         # bucket key: the (frozen, hashable) QAOAConfig — one compiled
         # program and one queue per static solver configuration
         self._buckets: "OrderedDict[qaoa_mod.QAOAConfig, deque]" = OrderedDict()
+        # dispatched batches whose device results have not landed yet
+        self._inflight: "deque[_Batch]" = deque()
+        self._last_harvest_t = 0.0  # de-queues solve-time observations
         # in-flight dedup: canonical key → (primary request id, its quality);
         # isomorphic requests admitted while their twin is still solving
         # coalesce onto it and are served from cache when it completes
-        self._inflight: dict[str, tuple[int, float]] = {}
+        self._inflight_forms: dict[str, tuple[int, float]] = {}
         self._followers: dict[str, list] = {}
 
     # ------------------------------------------------------------- admit --
@@ -149,69 +235,94 @@ class SolveService:
         sla: SLA = SLA(),
         stream: bool = False,
         on_update: Optional[Callable] = None,
+        tenant: str = "default",
+        defer: bool = False,
     ) -> int:
-        """Admit one solve request; returns its request id.
+        """Place one solve request on the admission queue; returns its id.
 
-        Cache hits complete immediately (the result is visible in
-        `results` on return); misses enqueue the request's subgraphs into
-        the shared batch queue — call `pump`/`drain` to make progress.
+        With ``defer=False`` (default) admission happens before `submit`
+        returns: cache hits complete immediately (the result is visible
+        in `results` on return); misses enqueue the request's subgraphs
+        into the shared batch queues. ``defer=True`` guarantees only
+        that *this call* does no admission work — the request waits on
+        the admission queue until the next `pump` tick or the next eager
+        `submit`, whichever drains the (strictly FIFO) queue first; the
+        interleaved-arrival shape of a live frontend, where requests
+        land while earlier batches are still in flight. Either way, call
+        `pump`/`drain` to make progress.
         """
         rid = self._next_id
         self._next_id += 1
-        t0 = time.perf_counter()
-
-        plan = self.planner.plan(graph.n, graph.n_edges, sla)
-        form = None
-        if self.config.enable_cache:
-            form = canonical_form(graph)
-            hit = self.cache.lookup(graph, form=form, min_quality=plan.quality)
-            if hit is not None:
-                assignment, cut = hit
-                self._record_cached(
-                    rid, graph, plan, assignment, cut, t0,
-                    stream=stream, on_update=on_update,
-                )
-                return rid
-            # coalesce onto an in-flight isomorphic twin of sufficient
-            # quality: no work enqueued; served from cache at its merge.
-            # Streaming requests bypass dedup — they want per-level updates.
-            primary = self._inflight.get(form.key)
-            if primary is not None and primary[1] >= plan.quality and not stream:
-                self._followers.setdefault(form.key, []).append(
-                    (rid, graph, sla, plan, form, t0)
-                )
-                return rid
-
-        self._admit(rid, graph, sla, plan, form, stream, on_update)
+        self.stats.tenant(tenant).submitted += 1
+        self._admission.append(
+            (rid, graph, sla, stream, on_update, tenant, time.perf_counter())
+        )
+        if not defer:
+            self._process_admissions()
         return rid
 
-    def _admit(self, rid, graph, sla, plan, form, stream, on_update) -> None:
+    def _process_admissions(self) -> None:
+        while self._admission:
+            rid, graph, sla, stream, on_update, tenant, t0 = (
+                self._admission.popleft()
+            )
+            self.stats.admitted += 1
+            plan = self.planner.plan(graph.n, graph.n_edges, sla)
+            form = None
+            if self.config.enable_cache:
+                form = canonical_form(graph)
+                hit = self.cache.lookup(
+                    graph, form=form, min_quality=plan.quality
+                )
+                if hit is not None:
+                    assignment, cut = hit
+                    self._record_cached(
+                        rid, graph, plan, assignment, cut, t0,
+                        stream=stream, on_update=on_update, tenant=tenant,
+                    )
+                    continue
+                # coalesce onto an in-flight isomorphic twin of sufficient
+                # quality: no work enqueued; served from cache at its merge.
+                # Streaming requests bypass dedup — they want per-level
+                # updates.
+                primary = self._inflight_forms.get(form.key)
+                if primary is not None and primary[1] >= plan.quality and not stream:
+                    self._followers.setdefault(form.key, []).append(
+                        (rid, graph, sla, plan, form, t0, tenant)
+                    )
+                    continue
+
+            self._admit(rid, graph, sla, plan, form, stream, on_update, tenant)
+
+    def _admit(self, rid, graph, sla, plan, form, stream, on_update,
+               tenant="default") -> None:
         """Enqueue a request's subgraphs into its shape bucket."""
         kn = plan.knobs
-        cfg = para_mod.ParaQAOAConfig(
-            n_qubits=kn.n_qubits,
-            top_k=kn.top_k,
-            merge_level=plan.merge_level,
-            p_layers=kn.p_layers,
-            opt_steps=kn.opt_steps,
-            beam_width=kn.beam_width,
-        )
-        req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form)
+        cfg = plan.to_config()
+        req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form,
+                       tenant)
+        t_part0 = time.perf_counter()
         req.part = partition_for_solver(graph, kn.n_qubits)
+        if self.config.recalibrate:
+            observe = getattr(self.planner, "observe_partition", None)
+            if observe is not None:
+                observe(graph.n, graph.n_edges,
+                        time.perf_counter() - t_part0)
         req.bit_indices = np.zeros((req.part.m, kn.top_k), dtype=np.int64)
         req.remaining = req.part.m
+        req.admit_dispatch = self.stats.dispatches
         self._active[rid] = req
-        if form is not None and form.key not in self._inflight:
-            self._inflight[form.key] = (rid, plan.quality)
+        if form is not None and form.key not in self._inflight_forms:
+            self._inflight_forms[form.key] = (rid, plan.quality)
 
         qcfg = cfg.qaoa_config()
         queue = self._buckets.setdefault(qcfg, deque())
         for idx in range(req.part.m):
-            queue.append((req, idx))
+            queue.append(_Item(req, idx, self.stats.dispatches))
 
     def _record_cached(
         self, rid, graph, plan, assignment, cut, t0,
-        stream=False, on_update=None,
+        stream=False, on_update=None, tenant="default",
     ) -> None:
         # a streamed request served from cache still gets its anytime
         # contract: one final update (the answer is complete immediately)
@@ -228,49 +339,161 @@ class SolveService:
             latency_s=now - t0,
             timings={"cache_s": now - t0},
             anytime=anytime,
+            tenant=tenant,
         )
         self.stats.completed += 1
         self.stats.cache_served += 1
+        ts = self.stats.tenant(tenant)
+        ts.completed += 1
+        ts.cache_served += 1
 
-    # ------------------------------------------------------------- solve --
-    def pump(self) -> bool:
-        """Dispatch one cross-request batch (the fullest bucket) and run
-        any merges it unblocks. Returns True while work remains."""
-        bucket = max(
-            (b for b in self._buckets.items() if b[1]),
-            key=lambda b: len(b[1]),
-            default=None,
-        )
+    # --------------------------------------------------------- dispatch --
+    def _pick_bucket(self):
+        """The bucket to dispatch next: the fullest — unless some queue's
+        head item has waited ``max_wait_dispatches`` dispatches, in which
+        case the queue with the oldest head pre-empts (the bounded-delay
+        guarantee of DESIGN.md §6.5)."""
+        live = [(qcfg, q) for qcfg, q in self._buckets.items() if q]
+        if not live:
+            return None
+        fullest = max(live, key=lambda b: len(b[1]))
+        bound = self.config.max_wait_dispatches
+        overdue = [
+            (qcfg, q) for qcfg, q in live
+            if self.stats.dispatches - q[0].enq_dispatch >= bound
+        ]
+        if overdue:
+            choice = min(overdue, key=lambda b: b[1][0].enq_dispatch)
+            if choice[0] is not fullest[0]:  # an actual pre-emption, not
+                self.stats.preemptions += 1  # the pick it would get anyway
+            return choice
+        return fullest
+
+    def _take_items(self, queue: deque) -> list:
+        """Pop up to ``batch_slots`` items, round-robin across tenants.
+
+        With a single tenant (or a queue that fits one dispatch) this is
+        plain FIFO. Under contention, slots interleave tenants in
+        arrival order of each tenant's oldest item, optionally capped at
+        ``tenant_max_slots`` per tenant so one heavy tenant cannot fill
+        the whole dispatch while others wait. The quota is
+        work-conserving: once every tenant with queued items has had its
+        capped share, leftover slots fill round-robin anyway — padding
+        rows cost the same as filled ones, so idling capacity would only
+        delay the capped tenant without helping anyone.
+        """
+        slots = self.config.batch_slots
+        if len(queue) <= slots:
+            items = list(queue)
+            queue.clear()
+            return items
+        by_tenant: "OrderedDict[str, deque]" = OrderedDict()
+        for it in queue:
+            by_tenant.setdefault(it.req.tenant, deque()).append(it)
+        cap = self.config.tenant_max_slots
+        if cap is None or len(by_tenant) <= 1:
+            cap = slots
+        cap = max(cap, 1)  # a 0/negative quota must still make progress
+        picked, taken = [], {t: 0 for t in by_tenant}
+        while len(picked) < slots and by_tenant:
+            progressed = False
+            for t in list(by_tenant):
+                if len(picked) == slots:
+                    break
+                if taken[t] >= cap:
+                    continue
+                picked.append(by_tenant[t].popleft())
+                taken[t] += 1
+                progressed = True
+                if not by_tenant[t]:
+                    del by_tenant[t]
+            if not progressed:
+                # every waiting tenant got its capped share: fill the
+                # leftover slots rather than dispatch empty rows
+                cap = slots
+        chosen = set(map(id, picked))
+        remaining = [it for it in queue if id(it) not in chosen]
+        queue.clear()
+        queue.extend(remaining)
+        return picked
+
+    def _dispatch_one(self) -> bool:
+        """Issue one cross-request batch to the backend (non-blocking)."""
+        bucket = self._pick_bucket()
         if bucket is None:
             return False
         qcfg, queue = bucket
         slots = self.config.batch_slots
-        items = [queue.popleft() for _ in range(min(slots, len(queue)))]
+        items = self._take_items(queue)
 
         edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
-            [req.part.subgraphs[idx] for req, idx in items],
+            [it.req.part.subgraphs[it.idx] for it in items],
             qcfg.n_qubits,
             e_pad=edge_capacity(qcfg.n_qubits),
             n_rows=slots,
         )
-        program = qaoa_mod.solve_subgraph_batch_program(qcfg)
-        res = program(edges, weights, masks)
-        bitstrings = np.asarray(res.bitstrings)
+        res = self.backend.solve_batch(qcfg, edges, weights, masks)
+        self._inflight.append(_Batch(qcfg, items, res, time.perf_counter()))
 
         self.stats.dispatches += 1
         self.stats.slots_total += slots
         self.stats.slots_filled += len(items)
+        self.stats.max_inflight_seen = max(
+            self.stats.max_inflight_seen, len(self._inflight)
+        )
+        for it in items:
+            self.stats.tenant(it.req.tenant).slots += 1
+        return True
+
+    def _harvest_one(self) -> None:
+        """Land the oldest in-flight batch (blocks) and run any merges it
+        unblocks."""
+        batch = self._inflight.popleft()
+        bitstrings = np.asarray(batch.result.bitstrings)  # blocks here
+        t_land = time.perf_counter()
+        if self.config.recalibrate:
+            observe = getattr(self.planner, "observe_solve", None)
+            if observe is not None:
+                # the device runs batches serially, so this batch's compute
+                # window starts when the previous harvest ended — not at
+                # issue time, which would bill it for the whole in-flight
+                # queue ahead of it and inflate c_solve ~max_inflight-fold
+                t_start = max(batch.t_issue, self._last_harvest_t)
+                observe(
+                    batch.qcfg.n_qubits, batch.qcfg.p_layers,
+                    batch.qcfg.opt_steps, self.config.batch_slots,
+                    t_land - t_start,
+                )
+        self._last_harvest_t = t_land
 
         done_requests = []
-        for slot, (req, idx) in enumerate(items):
-            req.bit_indices[idx] = bitstrings[slot]
-            req.remaining -= 1
-            if req.remaining == 0:
-                done_requests.append(req)
+        for slot, it in enumerate(batch.items):
+            it.req.bit_indices[it.idx] = bitstrings[slot]
+            it.req.remaining -= 1
+            if it.req.remaining == 0:
+                done_requests.append(it.req)
         for req in done_requests:
             req.solve_done_t = time.perf_counter()
             self._merge(req)
-        return any(self._buckets.values())
+
+    # ------------------------------------------------------------- solve --
+    def pump(self) -> bool:
+        """One deterministic event-loop tick: drain the admission queue,
+        fill the dispatch window (up to ``max_inflight`` batches issued
+        without blocking), then harvest the oldest in-flight batch and
+        run any merges it unblocks. Returns True while work remains."""
+        self._process_admissions()
+        window = max(self.config.max_inflight, 1)  # 0 would never dispatch
+        while len(self._inflight) < window:
+            if not self._dispatch_one():
+                break
+        if self._inflight:
+            self._harvest_one()
+        return bool(
+            self._inflight
+            or self._admission
+            or any(self._buckets.values())
+        )
 
     def drain(self) -> "OrderedDict[int, RequestResult]":
         """Run the scheduler until every admitted request has a result."""
@@ -307,6 +530,11 @@ class SolveService:
                 req.on_update(req.id, 1, 1, cut)
 
         now = time.perf_counter()
+        if self.config.recalibrate:
+            observe = getattr(self.planner, "observe_merge", None)
+            if observe is not None:
+                observe(req.plan.knobs, req.part.m, req.graph.n_edges,
+                        now - req.solve_done_t)
         if self.config.enable_cache:
             self.cache.store(
                 req.graph,
@@ -328,20 +556,25 @@ class SolveService:
                 "total_s": now - req.submit_t,
             },
             anytime=anytime,
+            tenant=req.tenant,
+            dispatches_waited=self.stats.dispatches - req.admit_dispatch,
         )
         self.stats.completed += 1
+        self.stats.tenant(req.tenant).completed += 1
         del self._active[req.id]
 
         # serve coalesced isomorphic followers from the just-stored entry
         if req.form is not None:
-            self._inflight.pop(req.form.key, None)
-            for frid, g, sla, plan, form, t0 in self._followers.pop(
+            self._inflight_forms.pop(req.form.key, None)
+            for frid, g, sla, plan, form, t0, tenant in self._followers.pop(
                 req.form.key, []
             ):
                 hit = self.cache.lookup(g, form=form, min_quality=plan.quality)
                 if hit is not None:
-                    self._record_cached(frid, g, plan, hit[0], hit[1], t0)
+                    self._record_cached(frid, g, plan, hit[0], hit[1], t0,
+                                        tenant=tenant)
                 else:
                     # canonical-key collision surfaced by the cache's
                     # re-score: solve the follower for real
-                    self._admit(frid, g, sla, plan, form, False, None)
+                    self._admit(frid, g, sla, plan, form, False, None,
+                                tenant=tenant)

@@ -40,3 +40,23 @@ def request_mix(
             fresh.append(g)
             graphs.append(g)
     return graphs
+
+
+def tenant_mix(load: int, tenants: int, seed: int) -> list:
+    """Seed-stable tenant labels (``"t0"``…) for one offered load.
+
+    A *skewed* assignment — tenant ``t0`` claims roughly half the
+    requests, the rest split evenly — because uniform traffic never
+    exercises the scheduler's fairness/quota path (DESIGN.md §6.5).
+    With one tenant everything is ``"t0"``.
+    """
+    if tenants < 1:
+        raise ValueError(f"tenants must be >= 1: {tenants}")
+    rng = np.random.default_rng(seed + 0x7E7A)
+    labels = []
+    for _ in range(load):
+        if tenants == 1 or rng.random() < 0.5:
+            labels.append("t0")
+        else:
+            labels.append(f"t{int(rng.integers(1, tenants))}")
+    return labels

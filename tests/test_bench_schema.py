@@ -15,6 +15,7 @@ EXPECTED_FILES = {
     "BENCH_schedules.json",
     "BENCH_distributed.json",
     "BENCH_service.json",
+    "BENCH_service_mesh.json",
     "BENCH_sharded_engine.json",
 }
 
@@ -105,3 +106,29 @@ def test_service_rows_carry_load_metrics():
     big = [r for r in speedups if r["load"] >= 4]
     assert big and all(r["speedup"] >= 1.5 for r in big), speedups
     assert all(r["cut_equal"] for r in speedups)
+
+
+def test_service_mesh_rows_carry_parity_and_async_claims():
+    """The §6.5 suite must record the backend parity contract and the
+    async-admission acceptance claim: cuts bit-identical across backends
+    (and to solo `core.solve`) on every parity row, the mesh rows run on
+    a real multi-device mesh, and the async loop sustains >= the
+    synchronous (max_inflight=1) throughput at 8 concurrent requests."""
+    path = RESULTS / "BENCH_service_mesh.json"
+    payload = json.loads(path.read_text())
+    modes = [r for r in payload["rows"] if "mode" in r]
+    assert {r["mode"] for r in modes} == {"local", "mesh"}
+    for row in modes:
+        for key in ("load", "throughput_rps", "p50_s", "p99_s", "devices"):
+            assert key in row, f"{row['name']}: missing {key}"
+    mesh_rows = [r for r in modes if r["mode"] == "mesh"]
+    assert all(r["devices"] >= 2 for r in mesh_rows), mesh_rows
+    parity = [r for r in payload["rows"] if "cut_equal" in r]
+    assert parity, "missing service_mesh/parity_* rows"
+    assert all(r["cut_equal"] for r in parity), parity
+    async_rows = [r for r in payload["rows"] if "async_over_sync" in r]
+    assert async_rows, "missing service_mesh/async_vs_sync_* row"
+    for row in async_rows:
+        assert row["load"] >= 8, row
+        assert row["async_ge_sync"] is True, row
+        assert row["async_over_sync"] >= 1.0, row

@@ -67,6 +67,17 @@ def test_merge_sharded_matches_exact():
     assert res["assignment_achieves_val"], res
 
 
+def test_service_mesh_backend_parity():
+    """The solve service over `MeshBackend` (solve_pool on an emulated
+    4-device `data` mesh) returns bit-identical cuts/assignments to the
+    single-device `LocalBackend` — and to solo `core.solve` — on the
+    parity mix, with per-tenant accounting and the async dispatch window
+    engaged (DESIGN.md §6.5)."""
+    res = _run_check("service_mesh")
+    for key, ok in res.items():
+        assert ok, f"{key}: {res}"
+
+
 def test_solve_distributed_matches_single_device():
     """End-to-end pipeline parity on emulated devices (DESIGN.md §2.4):
     same cut value as single-device `solve` on a small fixed graph, for

@@ -266,3 +266,113 @@ def test_ops_apply_layer_dispatch_matches_xla():
         gr, gi = ops.apply_layer(re, im, cutv, 0.4, 0.9, n, group=group)
     np.testing.assert_allclose(np.asarray(gr), np.asarray(wr), atol=2e-5)
     np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-5)
+
+
+# ------------------------------------------- impl-keyed program caches --
+def test_batch_program_cache_keys_on_implementation():
+    """ROADMAP follow-up from PR 4: `solve_subgraph_batch_program` (the
+    solve/service/pool solver) must key its cache on the active
+    `kernels.ops` implementation — dispatch is a trace-time choice, so a
+    program traced under one impl silently ignores
+    `ops.using_implementation` forever after. Flipping impls must yield
+    distinct cached programs; re-selecting an impl must return *its*
+    program and reproduce its results bit-for-bit."""
+    from repro.core import qaoa as qaoa_mod
+    from repro.core.partition import partition_for_solver
+    from repro.kernels import ops
+
+    qcfg = qaoa_mod.QAOAConfig(n_qubits=6, p_layers=2, opt_steps=4, top_k=2)
+    g = _graph(16, 0.4, seed=21)
+    part = partition_for_solver(g, 6)
+    e, w, m = qaoa_mod.pad_subgraph_arrays(part.subgraphs, 6)
+
+    p_x = qaoa_mod.solve_subgraph_batch_program(qcfg)
+    r_x = p_x(e, w, m)
+    with ops.using_implementation("pallas_interpret"):
+        p_i = qaoa_mod.solve_subgraph_batch_program(qcfg)
+        # same impl, same config: one compiled program (cache hit)
+        assert qaoa_mod.solve_subgraph_batch_program(qcfg) is p_i
+        r_i = p_i(e, w, m)
+    # distinct impls: distinct programs, and flipping back returns the
+    # original (the pre-fix bug: one shared program for every impl)
+    assert p_x is not p_i
+    assert qaoa_mod.solve_subgraph_batch_program(qcfg) is p_x
+    r_x2 = qaoa_mod.solve_subgraph_batch_program(qcfg)(e, w, m)
+    np.testing.assert_array_equal(
+        np.asarray(r_x.bitstrings), np.asarray(r_x2.bitstrings)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_x.probs), np.asarray(r_x2.probs)
+    )
+    # the two impls agree semantically (per-candidate marginals to float32
+    # tolerance; exact candidate picks may flip between prob ties)
+    np.testing.assert_allclose(
+        np.asarray(r_i.probs), np.asarray(r_x.probs), atol=1e-6
+    )
+
+
+def test_batch_program_interpret_dispatch_fires_pallas_kernels():
+    """Under `pallas_interpret` the impl-keyed batch program must
+    actually reach the Pallas kernels (trace-time dispatch proof), and
+    the service path built on it must stay bit-identical to solo
+    `core.solve` under the same flipped impl."""
+    import repro.kernels.fused_layer as fused_mod
+    from repro.core import solve
+    from repro.kernels import ops
+    from repro.service import SLA, ServiceConfig, SolveService
+
+    calls = {"n": 0}
+    orig = fused_mod.fused_phase_mixer_group
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    fused_mod.fused_phase_mixer_group = spy
+    try:
+        with ops.using_implementation("pallas_interpret"):
+            svc = SolveService(ServiceConfig(
+                batch_slots=4, max_qubits=6, enable_cache=False,
+                recalibrate=False,
+            ))
+            g = _graph(14, 0.4, seed=22)
+            rid = svc.submit(g, SLA(deadline_s=30.0))
+            svc.drain()
+            r = svc.results[rid]
+            assert calls["n"] > 0, "pallas dispatch never fired"
+            solo = solve(g, r.plan.to_config())
+            assert r.cut_value == solo.cut_value
+            np.testing.assert_array_equal(r.assignment, solo.assignment)
+    finally:
+        fused_mod.fused_phase_mixer_group = orig
+
+
+def test_solve_pool_program_cache_keys_on_implementation():
+    """The pool stage's shard_map program keys on the impl too (a
+    1-device `data` mesh keeps this in-process); both impls' pool
+    results agree semantically."""
+    from repro import compat
+    from repro.core import distributed as dist
+    from repro.core import qaoa as qaoa_mod
+    from repro.core.partition import partition_for_solver
+    from repro.kernels import ops
+
+    qcfg = qaoa_mod.QAOAConfig(n_qubits=6, p_layers=2, opt_steps=4, top_k=2)
+    mesh = compat.make_mesh((1,), ("data",))
+    donate = compat.supports_donation()
+    p_x = dist._solve_pool_program(qcfg, mesh, ("data",), donate, "xla")
+    p_i = dist._solve_pool_program(
+        qcfg, mesh, ("data",), donate, "pallas_interpret"
+    )
+    assert p_x is not p_i
+    assert dist._solve_pool_program(qcfg, mesh, ("data",), donate, "xla") is p_x
+
+    g = _graph(16, 0.4, seed=23)
+    part = partition_for_solver(g, 6)
+    e, w, m = qaoa_mod.pad_subgraph_arrays(part.subgraphs, 6)
+    r_x = dist.solve_pool(e, w, m, qcfg, mesh)
+    with ops.using_implementation("pallas_interpret"):
+        r_i = dist.solve_pool(e, w, m, qcfg, mesh)
+    np.testing.assert_allclose(
+        np.asarray(r_i.probs), np.asarray(r_x.probs), atol=1e-6
+    )

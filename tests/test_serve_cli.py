@@ -53,3 +53,22 @@ def test_serve_maxcut_sla_and_service_flags():
     assert args.batch == 8 and args.cache_capacity == 32
     assert args.no_cache and args.stream
     assert args.qubits == 8 and args.repeat_frac == 0.5
+
+
+def test_serve_maxcut_backend_defaults():
+    args = maxcut_parser().parse_args([])
+    assert args.mesh is None
+    assert args.tenants == 1
+    assert args.max_inflight == 2
+    assert not args.no_recalibrate
+
+
+def test_serve_maxcut_mesh_and_tenancy_flags():
+    args = maxcut_parser().parse_args([
+        "--mesh", "data=4", "--tenants", "3", "--max-inflight", "4",
+        "--no-recalibrate",
+    ])
+    assert args.mesh == "data=4"
+    assert args.tenants == 3
+    assert args.max_inflight == 4
+    assert args.no_recalibrate

@@ -21,12 +21,7 @@ from repro.service import (
 
 
 def _cfg_from_result(r) -> ParaQAOAConfig:
-    kn = r.plan.knobs
-    return ParaQAOAConfig(
-        n_qubits=kn.n_qubits, top_k=kn.top_k, merge_level=r.plan.merge_level,
-        p_layers=kn.p_layers, opt_steps=kn.opt_steps,
-        beam_width=kn.beam_width,
-    )
+    return r.plan.to_config()
 
 
 # --------------------------------------------------------------- scheduler --
@@ -257,3 +252,138 @@ def test_streamed_cache_hit_still_fires_one_update():
     assert r.cached
     assert r.anytime == [(1, 1, r.cut_value)]
     assert updates == [(rid, 1, 1, r.cut_value)]
+
+
+# ----------------------------------------------------- online recalibration --
+def _assert_deadline_monotone(planner):
+    """Tightening the deadline never selects a slower-predicted tuple —
+    evaluated against the planner's *current* cost model."""
+    for n, e in ((50, 180), (400, 3000)):
+        prev = None
+        for deadline in (300.0, 60.0, 5.0, 0.5, 0.01):
+            t = planner.plan(n, e, SLA(deadline_s=deadline)).predicted.total_s
+            if prev is not None:
+                assert t <= prev + 1e-12, (n, deadline, t, prev)
+            prev = t
+
+
+def test_refit_with_zero_observations_is_noop_bit_for_bit():
+    planner = Planner(max_qubits=12)
+    before = planner.cost_model
+    for _ in range(5):
+        planner.plan(100, 500, SLA(deadline_s=10.0))
+    assert planner.cost_model == before  # field-wise float equality
+    assert planner.cost_model == planner.base_model
+    assert planner.calibration.total == 0
+
+
+def test_streaming_refit_blends_observations():
+    planner = Planner(max_qubits=12, recalibrate_alpha=0.5)
+    c0 = planner.cost_model.c_solve
+    # a dispatch far slower than the fitted prior predicts
+    planner.observe_solve(10, 2, 12, 16, seconds=50.0)
+    assert planner.calibration.solve_obs == 1
+    assert planner.cost_model.c_solve > c0
+    assert planner.cost_model != planner.base_model
+    # repeated identical observations converge c_solve to the implied
+    # per-work-unit coefficient (exponentially weighted average)
+    work = 16 * (12 + 1) * 2 * 2**10
+    implied = (50.0 - planner.cost_model.c_dispatch) / work
+    for _ in range(40):
+        planner.observe_solve(10, 2, 12, 16, seconds=50.0)
+    assert abs(planner.cost_model.c_solve - implied) < 0.05 * implied
+    # the other stages stream too
+    planner.observe_partition(1000, 9000, 0.5)
+    planner.observe_merge(KnobTuple(10, 2, 12, 128), 40, 9000, 2.0)
+    assert planner.calibration.partition_obs == 1
+    assert planner.calibration.merge_obs == 1
+
+
+def test_deadline_monotonicity_survives_streaming_refits():
+    """The satellite acceptance property: monotonicity holds before,
+    during, and after refits — including degenerate (zero-time) and
+    extreme observations — because selection is structural over any
+    non-negative coefficients."""
+    planner = Planner(max_qubits=12)
+    _assert_deadline_monotone(planner)  # before any refit
+    planner.observe_solve(10, 2, 30, 16, seconds=50.0)
+    planner.observe_partition(1000, 10000, 2.0)
+    _assert_deadline_monotone(planner)  # mid-stream
+    planner.observe_merge(KnobTuple(10, 2, 12, 128), 40, 5000, 9.0)
+    for _ in range(10):
+        planner.observe_solve(6, 2, 4, 16, seconds=0.0)  # degenerate
+    planner.observe_merge(KnobTuple(12, 4, 30, 512), 3, 10, 1e4)  # extreme
+    _assert_deadline_monotone(planner)  # after
+    cm = planner.cost_model
+    assert min(cm.c_partition, cm.c_solve, cm.c_merge) >= 0.0
+
+
+def test_scheduler_streams_stage_timings_into_planner():
+    """Serving real requests recalibrates the live cost model: every
+    stage records observations and the model moves off the fitted prior."""
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=6))
+    g = Graph.erdos_renyi(24, 0.3, seed=31)
+    svc.submit(g, SLA(deadline_s=30.0))
+    svc.drain()
+    cal = svc.planner.calibration
+    assert cal.partition_obs >= 1
+    assert cal.solve_obs >= 1
+    assert cal.merge_obs >= 1
+    assert svc.planner.cost_model != svc.planner.base_model
+    assert svc.planner.base_model == Planner(
+        max_qubits=6, batch_slots=8
+    ).cost_model  # the prior itself never mutates
+
+
+def test_recalibrate_off_freezes_cost_model():
+    svc = SolveService(ServiceConfig(batch_slots=8, max_qubits=6,
+                                     recalibrate=False))
+    g = Graph.erdos_renyi(24, 0.3, seed=32)
+    svc.submit(g, SLA(deadline_s=30.0))
+    svc.drain()
+    assert svc.planner.calibration.total == 0
+    assert svc.planner.cost_model == svc.planner.base_model
+
+
+# ------------------------------------------------------------ mesh backend --
+def test_mesh_backend_single_device_parity():
+    """`MeshBackend` over a trivial 1-device `data` mesh (always
+    constructible in-process) must stay bit-identical to the local
+    backend; the real multi-device parity runs in
+    tests/test_distributed.py::test_service_mesh_backend_parity."""
+    import jax
+
+    from repro.service import MeshBackend
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    graphs = [Graph.erdos_renyi(n, 0.3, seed=s)
+              for s, n in enumerate((20, 26))]
+    sla = SLA(deadline_s=30.0)
+
+    def run(backend):
+        svc = SolveService(
+            ServiceConfig(batch_slots=8, max_qubits=6, enable_cache=False,
+                          recalibrate=False),
+            backend=backend,
+        )
+        rids = [svc.submit(g, sla) for g in graphs]
+        svc.drain()
+        return [svc.results[r] for r in rids]
+
+    local = run(None)
+    meshed = run(MeshBackend(mesh))
+    for a, b in zip(local, meshed):
+        assert a.cut_value == b.cut_value
+        np.testing.assert_array_equal(a.assignment, b.assignment)
+
+
+def test_mesh_backend_rejects_model_only_mesh():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.service import MeshBackend
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("model",))
+    with pytest.raises(ValueError):
+        MeshBackend(mesh)

@@ -1,0 +1,199 @@
+"""Property-based soak of the solve service under the async admission
+loop (DESIGN.md §6.5): randomized request mixes — sizes, SLAs, tenants,
+isomorphic repeats, interleaved arrivals — must preserve the standing
+service invariants:
+
+  - every admitted request completes, and no request waits more than a
+    bounded number of dispatches (anti-starvation pre-emption);
+  - bucket fill never exceeds the fixed ``batch_slots`` shape;
+  - non-cached cuts/assignments are bit-identical to solo `core.solve`
+    on the request's own planned knobs;
+  - cache hits are served only from equal-or-better-quality entries;
+  - the in-flight window never exceeds ``max_inflight``.
+
+Runs under real Hypothesis when installed, else the vendored
+tests/_propshim.py shim (deterministic seeded draws)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve
+from repro.core.graph import Graph
+from repro.core.partition import partition_for_solver
+from repro.service import SLA, ServiceConfig, SolveService
+from repro.service.canonical import canonical_form
+from repro.service.workload import request_mix, tenant_mix
+
+
+def _solo_cfg(r):
+    return r.plan.to_config()
+
+
+def _queued(svc) -> int:
+    return sum(len(q) for q in svc._buckets.values())
+
+
+@given(
+    seed=st.integers(0, 10**6),
+    load=st.integers(4, 7),
+    repeat=st.floats(0.0, 0.5),
+    slots=st.sampled_from([4, 8]),
+    tenants=st.integers(1, 3),
+    inflight=st.integers(1, 3),
+    defer=st.booleans(),
+    deadline=st.sampled_from([5.0, 30.0, None]),
+)
+@settings(max_examples=4, deadline=None)
+def test_service_soak_invariants(
+    seed, load, repeat, slots, tenants, inflight, defer, deadline
+):
+    graphs = request_mix(load, (12, 26), 0.3, repeat, seed)
+    labels = tenant_mix(load, tenants, seed)
+    svc = SolveService(ServiceConfig(
+        batch_slots=slots, max_qubits=6, cache_capacity=512,
+        max_inflight=inflight, max_wait_dispatches=3,
+        tenant_max_slots=max(slots // 2, 1),
+    ))
+    sla = SLA(deadline_s=deadline)
+
+    # interleaved arrivals: half up front, a couple of event-loop ticks,
+    # then the rest land while earlier batches may still be in flight
+    half = load // 2
+    rids, queued_at_admit = [], []
+    for g, t in zip(graphs[:half], labels[:half]):
+        queued_at_admit.append(_queued(svc))
+        rids.append(svc.submit(g, sla, tenant=t))
+    svc.pump()
+    svc.pump()
+    for g, t in zip(graphs[half:], labels[half:]):
+        queued_at_admit.append(_queued(svc) + len(svc._admission))
+        rids.append(svc.submit(g, sla, tenant=t, defer=defer))
+    svc.drain()
+
+    # completion + fixed-shape accounting
+    assert svc.stats.completed == load and len(svc.results) == load
+    assert svc.stats.slots_total == svc.stats.dispatches * slots
+    assert svc.stats.slots_filled <= svc.stats.slots_total
+    assert svc.stats.max_inflight_seen <= inflight
+    assert not svc._inflight and not svc._admission and not _queued(svc)
+
+    n_buckets = max(len(svc._buckets), 1)
+    for g, rid, t, q0 in zip(graphs, rids, labels, queued_at_admit):
+        r = svc.results[rid]
+        assert r.tenant == t
+        if r.cached:
+            # hits only from equal-or-better-quality entries (§6.3 gate)
+            entry = svc.cache._entries.get(canonical_form(g).key)
+            assert entry is not None
+            assert entry.quality >= r.plan.quality - 1e-12
+            assert r.cut_value == float(
+                np.float32(r.cut_value)
+            )  # served cut is a real replayed score
+        else:
+            solo = solve(g, _solo_cfg(r))
+            assert r.cut_value == solo.cut_value, (rid, r.plan.knobs)
+            np.testing.assert_array_equal(r.assignment, solo.assignment)
+            # bounded delay: each head-of-bucket position is dispatched
+            # within max_wait_dispatches + (other overdue buckets), and
+            # the request drains one head position per bucket dispatch
+            m = partition_for_solver(g, r.plan.knobs.n_qubits).m
+            bound = (q0 + m) * (
+                svc.config.max_wait_dispatches + n_buckets
+            ) + inflight + 1
+            assert r.dispatches_waited <= bound, (
+                rid, r.dispatches_waited, bound
+            )
+
+
+def test_admission_accepted_while_batches_in_flight():
+    """The async loop's defining behavior: a request submitted while
+    dispatched batches are still unharvested joins the queues and
+    completes — no closed pump loop."""
+    svc = SolveService(ServiceConfig(
+        batch_slots=4, max_qubits=6, enable_cache=False,
+        max_inflight=2, recalibrate=False,
+    ))
+    sla = SLA(deadline_s=20.0)
+    rid0 = svc.submit(Graph.erdos_renyi(22, 0.3, seed=0), sla)
+    # fill the dispatch window without harvesting anything
+    while len(svc._inflight) < svc.config.max_inflight:
+        if not svc._dispatch_one():
+            break
+    assert svc._inflight, "no batch in flight"
+    inflight_at_submit = len(svc._inflight)
+    rid1 = svc.submit(Graph.erdos_renyi(18, 0.3, seed=1), sla, defer=True)
+    assert svc._admission, "deferred request should sit on the admission queue"
+    assert len(svc._inflight) == inflight_at_submit  # submit never blocks
+    svc.drain()
+    assert not svc.results[rid0].cached and not svc.results[rid1].cached
+    assert svc.stats.completed == 2
+    assert svc.stats.max_inflight_seen >= 2
+
+
+def test_tenant_round_robin_and_quota():
+    """Under contention the dispatcher interleaves tenants and honors
+    ``tenant_max_slots``: a heavy tenant cannot fill a dispatch while a
+    light tenant waits."""
+    svc = SolveService(ServiceConfig(
+        batch_slots=4, max_qubits=6, enable_cache=False,
+        max_inflight=1, tenant_max_slots=2, recalibrate=False,
+    ))
+    sla = SLA(deadline_s=20.0)
+    # single-subgraph requests (n <= 6 fits one 6-qubit solver): 6 from
+    # the heavy tenant, 2 from the light one, all in one bucket
+    for s in range(6):
+        svc.submit(Graph.erdos_renyi(6, 0.6, seed=s), sla, tenant="heavy")
+    for s in range(2):
+        svc.submit(Graph.erdos_renyi(6, 0.6, seed=100 + s), sla,
+                   tenant="light")
+    svc.pump()  # one tick = one dispatch at max_inflight=1
+    assert svc.stats.dispatches == 1
+    assert svc.stats.tenants["heavy"].slots == 2  # capped
+    assert svc.stats.tenants["light"].slots == 2  # round-robin share
+    svc.drain()
+    assert svc.stats.completed == 8
+    assert svc.stats.tenants["heavy"].completed == 6
+    assert svc.stats.tenants["light"].completed == 2
+
+
+def test_starved_bucket_preempts_fuller_one():
+    """A lone request in a sparse bucket must not starve behind a flood
+    in a fuller bucket: after ``max_wait_dispatches`` dispatches its
+    bucket pre-empts the fullest-bucket heuristic."""
+    svc = SolveService(ServiceConfig(
+        batch_slots=2, max_qubits=8, enable_cache=False,
+        max_inflight=1, max_wait_dispatches=2, recalibrate=False,
+    ))
+    # flood: best-quality knobs (no deadline → one bucket of rich knobs)
+    for s in range(4):
+        svc.submit(Graph.erdos_renyi(26, 0.3, seed=s), SLA())
+    # the lone request: a tight deadline selects cheaper knobs → its own
+    # bucket, far emptier than the flood's
+    lone = svc.submit(Graph.erdos_renyi(26, 0.3, seed=50),
+                      SLA(deadline_s=0.05))
+    flood_cfgs = {r.cfg for rid, r in svc._active.items() if rid != lone}
+    assert svc._active[lone].cfg not in flood_cfgs, (
+        "test needs the lone request in its own bucket"
+    )
+    svc.drain()
+    r = svc.results[lone]
+    m = partition_for_solver(
+        Graph.erdos_renyi(26, 0.3, seed=50), r.plan.knobs.n_qubits
+    ).m
+    # lone bucket head waits <= max_wait_dispatches per head position
+    bound = m * (svc.config.max_wait_dispatches + 2) + 1
+    assert r.dispatches_waited <= bound, (r.dispatches_waited, bound)
+    assert svc.stats.preemptions >= 1
+
+
+def test_zero_inflight_window_still_makes_progress():
+    """Regression: ``max_inflight=0`` must clamp to a 1-batch window, not
+    busy-loop forever in `drain` with nothing ever dispatched."""
+    svc = SolveService(ServiceConfig(
+        batch_slots=4, max_qubits=6, enable_cache=False,
+        max_inflight=0, recalibrate=False,
+    ))
+    svc.submit(Graph.erdos_renyi(14, 0.4, seed=0), SLA(deadline_s=10.0))
+    svc.drain()
+    assert svc.stats.completed == 1
+    assert svc.stats.max_inflight_seen == 1
