@@ -1,0 +1,44 @@
+"""reprolint: AST invariant checker for the repro JAX/Pallas stack.
+
+Five rules, each descended from a bug this repo actually shipped or a
+contract its tests policed by hand (catalog: docs/ANALYSIS.md):
+
+  cache-key           cached program builders key mutable dispatch state
+  dispatch-purity     kernel impls reachable only through kernels.ops
+  tracer-hazard       no host casts / np.* / Python control flow on tracers
+  collective-axis     lax collective axis names resolve to mesh axes
+  hot-nondeterminism  no clocks/stdlib RNG in traced or replayed paths
+
+Run it:    python -m repro.analysis [paths] [--format json]
+Suppress:  # reprolint: disable=<rule>         (same line)
+           # reprolint: disable-file=<rule>    (whole file)
+Baseline:  src/repro/analysis/baseline.json (grandfathered fingerprints)
+"""
+
+from repro.analysis.engine import (
+    Finding,
+    ModuleInfo,
+    Project,
+    Report,
+    collect_files,
+    load_baseline,
+    run,
+    run_on_sources,
+    write_baseline,
+)
+from repro.analysis.rules import ALL_RULES, get_rules, rule_ids
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "ModuleInfo",
+    "Project",
+    "Report",
+    "collect_files",
+    "get_rules",
+    "load_baseline",
+    "rule_ids",
+    "run",
+    "run_on_sources",
+    "write_baseline",
+]

@@ -1,0 +1,45 @@
+"""reprolint rule registry.
+
+Each rule module exports a single Rule instance named ``RULE``; ids are
+short kebab-case slugs used in suppression comments
+(``# reprolint: disable=<id>``), ``--rules`` selection, and baseline
+fingerprints. The catalog with per-rule rationale and the historical bug
+each rule descends from lives in docs/ANALYSIS.md.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.analysis.rules import (
+    cache_key,
+    collectives,
+    determinism,
+    dispatch_purity,
+    tracer,
+)
+
+ALL_RULES = (
+    cache_key.RULE,
+    dispatch_purity.RULE,
+    tracer.RULE,
+    collectives.RULE,
+    determinism.RULE,
+)
+
+_BY_ID = {r.id: r for r in ALL_RULES}
+
+
+def rule_ids() -> list[str]:
+    return [r.id for r in ALL_RULES]
+
+
+def get_rules(ids: Sequence[str] | None = None):
+    if ids is None:
+        return ALL_RULES
+    unknown = [i for i in ids if i not in _BY_ID]
+    if unknown:
+        raise KeyError(
+            f"unknown rule(s) {unknown}; available: {sorted(_BY_ID)}"
+        )
+    return tuple(_BY_ID[i] for i in ids)

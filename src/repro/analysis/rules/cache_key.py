@@ -1,0 +1,118 @@
+"""cache-key: cached program builders must key mutable dispatch state.
+
+The PR 5 bug class: `solve_subgraph_batch_program` / `_solve_pool_program`
+cached jitted programs keyed only on the QAOA config — but the traced body
+dispatches through `kernels.ops`, which reads the *active implementation*
+at trace time. Two calls under different `ops.using_implementation`
+contexts silently shared one compiled program; the override never reached
+the pool/service paths (fixed by hand in PR 5, CHANGES.md).
+
+This rule makes the fix structural. For every builder decorated with
+`compat.cached_program` or `functools.lru_cache`:
+
+  1. if the builder (including its nested defs) traces through the
+     `kernels.ops` dispatch — a direct `ops.<op>` / `ops.get_implementation`
+     reference, or a call-graph path to one (cross-module, through
+     `jax.vmap` aliases and `functools.partial`) — then some builder
+     parameter must be re-asserted via ``ops.using_implementation(<param>)``
+     inside the body. The parameter puts the state in the lru_cache key;
+     the with-block makes the lazily-traced body agree with that key.
+  2. any ``ops.using_implementation(X)`` inside a cached builder where X
+     is *not* a plain builder parameter is flagged outright — e.g.
+     ``ops.using_implementation(ops.get_implementation())`` re-reads the
+     global at trace time and the cache key cannot see it.
+
+Callers are expected to pass ``ops.get_implementation()`` *at the call
+site* (that read happens per call, outside the cache).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ModuleInfo, Project
+
+_CACHE_DECORATORS = {
+    "repro.compat.cached_program",
+    "compat.cached_program",  # snippet projects without repro on the path
+    "functools.lru_cache",
+    "lru_cache",
+}
+_USING_IMPL = "repro.kernels.ops.using_implementation"
+
+RULE_ID = "cache-key"
+
+
+def _is_cached_builder(mod: ModuleInfo, node: ast.FunctionDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        qual = mod.qualify(target)
+        if qual in _CACHE_DECORATORS:
+            return True
+    return False
+
+
+def _param_names(node: ast.FunctionDef) -> set[str]:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+class CacheKeyRule:
+    id = RULE_ID
+    summary = (
+        "builders behind compat.cached_program/lru_cache must thread "
+        "mutable kernels.ops dispatch state through their key signature"
+    )
+
+    def check(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for fn in project.functions():
+            node = fn.node
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _is_cached_builder(fn.module, node):
+                continue
+            findings.extend(self._check_builder(project, fn.module, node))
+        return findings
+
+    def _check_builder(
+        self, project: Project, mod: ModuleInfo, node: ast.FunctionDef
+    ) -> list[Finding]:
+        params = _param_names(node)
+        keyed = False
+        findings: list[Finding] = []
+        for sub in ast.walk(node):
+            if not (isinstance(sub, ast.Call) and
+                    mod.qualify(sub.func) == _USING_IMPL):
+                continue
+            arg = sub.args[0] if sub.args else None
+            if isinstance(arg, ast.Name) and arg.id in params:
+                keyed = True
+            else:
+                findings.append(mod.finding(
+                    self.id, sub,
+                    "ops.using_implementation() inside cached builder "
+                    f"'{node.name}' must take a builder parameter, not "
+                    "an expression the cache key cannot see",
+                    symbol=node.name,
+                ))
+        if not keyed and not findings and \
+                project.is_impl_sensitive(mod, node):
+            findings.append(mod.finding(
+                self.id, node,
+                f"cached builder '{node.name}' traces through the "
+                "kernels.ops dispatch but does not key the active "
+                "implementation: add an `impl` parameter and wrap the "
+                "traced body in ops.using_implementation(impl) "
+                "(the PR 5 _solve_pool_program bug class)",
+                symbol=node.name,
+            ))
+        return findings
+
+
+RULE = CacheKeyRule()

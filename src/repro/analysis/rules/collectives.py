@@ -1,0 +1,172 @@
+"""collective-axis: `lax.psum`/`pmean`/`all_to_all`/... axis names must
+resolve to something the surrounding mesh can bind.
+
+A collective with an axis name that no enclosing `shard_map`/`pmap` mesh
+defines fails at trace time with an unbound-axis error — but only on the
+path that actually traces it, which for the service backends means "in
+production, under load, on the mesh topology CI never ran". The repo's
+convention (engine.py, distributed.py, merge.py) is to thread the axis
+through a parameter or a layout attribute (`layout.axis`), with the mesh
+axes themselves named by `compat.mesh_data_axes()` / `mesh_model_axis()`:
+"data", "model", and "pod".
+
+Accepted axis arguments, recursively through tuples:
+
+  - a string literal naming a known mesh axis ("data"/"model"/"pod"),
+  - a plain name bound in an enclosing scope (parameter or local — the
+    caller owns resolvability),
+  - an attribute whose terminal component mentions "axis"
+    (`layout.axis`, `cfg.model_axis`).
+
+Anything else — an unknown literal (typo'd axis name) or a computed
+expression the linter cannot follow — is flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ModuleInfo, Project
+
+RULE_ID = "collective-axis"
+
+# mesh axis names minted by compat.mesh_data_axes()/mesh_model_axis()
+KNOWN_AXES = {"data", "model", "pod"}
+
+# collective → positional index of the axis-name argument
+_AXIS_ARG: dict[str, int] = {
+    "jax.lax.psum": 1,
+    "jax.lax.pmean": 1,
+    "jax.lax.pmax": 1,
+    "jax.lax.pmin": 1,
+    "jax.lax.psum_scatter": 1,
+    "jax.lax.all_gather": 1,
+    "jax.lax.all_to_all": 1,
+    "jax.lax.ppermute": 1,
+    "jax.lax.pshuffle": 1,
+    "jax.lax.pswapaxes": 1,
+    "jax.lax.axis_index": 0,
+    "jax.lax.axis_size": 0,
+}
+_AXIS_KWARG = "axis_name"
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _scope_names(node: ast.AST) -> set[str]:
+    """Names bound inside one scope: parameters plus anything stored by
+    the body (without descending into nested defs — those are their own
+    scopes, though they *read* this one, hence the scope-chain union in
+    the visitor)."""
+    names: set[str] = set()
+    if isinstance(node, _FuncNode):
+        a = node.args
+        names.update(p.arg for p in a.posonlyargs + a.args + a.kwonlyargs)
+        if a.vararg:
+            names.add(a.vararg.arg)
+        if a.kwarg:
+            names.add(a.kwarg.arg)
+    elif isinstance(node, ast.Lambda):
+        a = node.args
+        names.update(p.arg for p in a.posonlyargs + a.args + a.kwonlyargs)
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        sub = stack.pop()
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            names.add(sub.id)
+        elif isinstance(sub, (ast.Import, ast.ImportFrom)):
+            for alias in sub.names:
+                names.add(alias.asname or alias.name.split(".")[0])
+        if not isinstance(sub, _FuncNode):
+            stack.extend(ast.iter_child_nodes(sub))
+    return names
+
+
+class CollectiveAxisRule:
+    id = RULE_ID
+    summary = (
+        "lax collective axis names must be known mesh axes, in-scope "
+        "names, or *.axis attributes"
+    )
+
+    def check(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for mod in project.modules:
+            scope = _scope_names(mod.tree)
+            self._visit(mod, mod.tree, scope, findings)
+        return findings
+
+    def _visit(
+        self,
+        mod: ModuleInfo,
+        node: ast.AST,
+        scope: set[str],
+        findings: list[Finding],
+    ) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (*_FuncNode, ast.Lambda)):
+                self._visit(mod, child, scope | _scope_names(child), findings)
+                continue
+            if isinstance(child, ast.Call):
+                self._check_call(mod, child, scope, findings)
+            self._visit(mod, child, scope, findings)
+
+    def _check_call(
+        self,
+        mod: ModuleInfo,
+        call: ast.Call,
+        scope: set[str],
+        findings: list[Finding],
+    ) -> None:
+        qual = mod.qualify(call.func)
+        pos = _AXIS_ARG.get(qual or "")
+        if pos is None:
+            return
+        axis: ast.AST | None = None
+        if len(call.args) > pos:
+            axis = call.args[pos]
+        else:
+            axis = next(
+                (k.value for k in call.keywords if k.arg == _AXIS_KWARG),
+                None,
+            )
+        if axis is None:
+            return
+        problem = self._axis_problem(axis, scope)
+        if problem:
+            findings.append(mod.finding(
+                self.id, call,
+                f"{qual.rsplit('.', 1)[-1]} axis {problem}; thread the "
+                "mesh axis name through a parameter or layout.axis "
+                f"(known mesh axes: {sorted(KNOWN_AXES)})",
+            ))
+
+    def _axis_problem(self, axis: ast.AST, scope: set[str]) -> str | None:
+        """None when the axis expression is acceptable, else a reason."""
+        if isinstance(axis, ast.Constant):
+            if isinstance(axis.value, str):
+                if axis.value in KNOWN_AXES:
+                    return None
+                return f"names unknown mesh axis '{axis.value}'"
+            return f"is a non-string literal {axis.value!r}"
+        if isinstance(axis, ast.Name):
+            if axis.id in scope:
+                return None
+            return f"name '{axis.id}' is not bound in any enclosing scope"
+        if isinstance(axis, ast.Attribute):
+            if "axis" in axis.attr.lower():
+                return None
+            return (
+                f"attribute '.{axis.attr}' does not look like an axis "
+                "handle (expected e.g. layout.axis)"
+            )
+        if isinstance(axis, (ast.Tuple, ast.List)):
+            for elt in axis.elts:
+                problem = self._axis_problem(elt, scope)
+                if problem:
+                    return problem
+            return None
+        return "is a computed expression the linter cannot resolve"
+
+
+RULE = CollectiveAxisRule()

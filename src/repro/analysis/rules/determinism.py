@@ -1,0 +1,131 @@
+"""hot-nondeterminism: wall-clock and stdlib RNG reads in code that must
+be replayable.
+
+Two protected regions:
+
+  1. **Traced functions** (jit/shard_map/vmap/scan bodies): `time.*`,
+     `datetime.*` clock reads, and stdlib `random.*` execute at *trace*
+     time, baking one arbitrary host value into the compiled program —
+     every subsequent call replays it silently. Randomness in traced code
+     must come from `jax.random` with threaded keys.
+
+  2. **The scheduler's deterministic decision path**
+     (`repro.service.scheduler`): bucket choice, admission, and merge
+     ordering are replayed from event logs during recalibration; a
+     `random.random()` tiebreak or `time.time()`-keyed decision breaks
+     replay equivalence. `time.perf_counter*` / `time.monotonic*` stay
+     allowed there — the scheduler reads them for *observability*
+     (latency accounting), never for decisions, and they never leave the
+     metrics structs.
+
+jax.random / numpy.random are not flagged: the former is the sanctioned
+mechanism, the latter is the tracer-hazard rule's jurisdiction.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ModuleInfo, Project
+from repro.analysis.rules.tracer import walk_shallow
+
+RULE_ID = "hot-nondeterminism"
+
+# modules whose *entire* body is a deterministic replay path
+DETERMINISTIC_PATHS = ("repro.service.scheduler",)
+
+# observability clocks: monotonic, never used for decisions
+_ALLOWED_CLOCKS = {
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+}
+_CLOCK_READS = {
+    "time.time", "time.time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _banned(qual: str, in_traced: bool) -> str | None:
+    """Reason string when `qual` is a nondeterministic read, else None."""
+    if qual == "random" or qual.startswith("random."):
+        return f"stdlib RNG '{qual}'"
+    if qual in _CLOCK_READS:
+        return f"wall-clock read '{qual}'"
+    if in_traced and qual.startswith("time.") and qual.count(".") == 1:
+        # inside a trace even a monotonic clock is a bake-in hazard
+        return f"host clock read '{qual}'"
+    return None
+
+
+class HotNondeterminismRule:
+    id = RULE_ID
+    summary = (
+        "no time/datetime/stdlib-random reads in traced functions or the "
+        "scheduler's deterministic pump/admission path"
+    )
+
+    def check(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        seen: set[tuple[str, int, int]] = set()
+
+        for fn in project.functions():
+            if fn.node not in project.traced:
+                continue
+            if not isinstance(fn.node, _FuncNode):
+                continue
+            mod = fn.module
+            symbol = (
+                fn.qualname[len(mod.modname) + 1:]
+                if fn.qualname.startswith(mod.modname + ".")
+                else fn.qualname
+            )
+            for node in walk_shallow(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = mod.qualify(node.func) or ""
+                reason = _banned(qual, in_traced=True)
+                if reason is None:
+                    continue
+                key = (mod.path, node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(mod.finding(
+                    self.id, node,
+                    f"{reason} inside a traced function: the value is "
+                    "read once at trace time and baked into the compiled "
+                    "program; use jax.random with threaded keys or hoist "
+                    "the read to the host side",
+                    symbol=symbol,
+                ))
+
+        for mod in project.modules:
+            if mod.modname not in DETERMINISTIC_PATHS:
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = mod.qualify(node.func) or ""
+                if qual in _ALLOWED_CLOCKS:
+                    continue
+                reason = _banned(qual, in_traced=False)
+                if reason is None:
+                    continue
+                key = (mod.path, node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(mod.finding(
+                    self.id, node,
+                    f"{reason} in deterministic scheduler path "
+                    f"'{mod.modname}': pump/admission decisions must "
+                    "replay from event logs; use time.perf_counter for "
+                    "observability or thread seeds explicitly",
+                ))
+        return findings
+
+
+RULE = HotNondeterminismRule()

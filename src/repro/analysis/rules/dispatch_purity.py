@@ -1,0 +1,95 @@
+"""dispatch-purity: kernel implementation modules are reachable only
+through `kernels.ops`.
+
+The repo's correctness story hangs on one dispatch chokepoint: every hot
+op (phase, mixer, cutvals, fused layer, cut batch) goes through
+`repro.kernels.ops`, so `pallas` / `pallas_interpret` / `xla` selection —
+and any future backend — applies identically on every path (DESIGN.md
+§2.6). A direct `kernels.ref` (or other impl-module) call silently pins
+that call site to one backend; exactly what the two ad-hoc source-contract
+tests (formerly in tests/test_engine.py, runtime half in
+tests/test_distributed.py::test_engine_ops_dispatch_per_shard) policed for
+five functions. This rule is that invariant over the whole tree.
+
+Flags any import that binds a kernel implementation module — at any scope
+— outside the allowed zones:
+
+  - `repro.kernels.*` itself (the implementation layer below the
+    dispatch boundary: ops.py fans out to the impl modules, and the impl
+    modules share helpers like `ref.popcount`),
+  - tests/ and benchmarks/ (they compare impls against `ref` on purpose).
+
+`repro.kernels.ops` itself is importable from anywhere — it *is* the
+boundary.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ModuleInfo, Project
+
+RULE_ID = "dispatch-purity"
+
+_KERNELS_PKG = "repro.kernels"
+_DISPATCH_OK = {"repro.kernels.ops", "repro.kernels"}
+
+
+def _allowed_module(mod: ModuleInfo) -> bool:
+    if mod.modname == _KERNELS_PKG or \
+            mod.modname.startswith(_KERNELS_PKG + "."):
+        return True
+    parts = mod.path.replace("\\", "/").split("/")
+    return "tests" in parts or "benchmarks" in parts
+
+
+def _impl_module(dotted: str) -> bool:
+    """True for repro.kernels.<impl> (not ops, not the package itself)."""
+    return (
+        dotted.startswith(_KERNELS_PKG + ".")
+        and dotted not in _DISPATCH_OK
+    )
+
+
+class DispatchPurityRule:
+    id = RULE_ID
+    summary = (
+        "no direct kernels.ref/phase/mixer/cutvals/fused_layer/cutbatch "
+        "imports outside repro.kernels, tests, and benchmarks"
+    )
+
+    def check(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for mod in project.modules:
+            if _allowed_module(mod):
+                continue
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        if _impl_module(alias.name):
+                            findings.append(self._flag(mod, node, alias.name))
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level:  # relative: outside repro.kernels already
+                        continue
+                    base = node.module or ""
+                    if _impl_module(base):
+                        findings.append(self._flag(mod, node, base))
+                    elif base == _KERNELS_PKG:
+                        for alias in node.names:
+                            dotted = f"{base}.{alias.name}"
+                            if _impl_module(dotted):
+                                findings.append(
+                                    self._flag(mod, node, dotted)
+                                )
+        return findings
+
+    def _flag(self, mod: ModuleInfo, node: ast.AST, dotted: str) -> Finding:
+        return mod.finding(
+            self.id, node,
+            f"direct kernel-implementation import '{dotted}': call through "
+            "repro.kernels.ops so backend dispatch (pallas/xla/interpret) "
+            "reaches this site",
+        )
+
+
+RULE = DispatchPurityRule()

@@ -1,0 +1,262 @@
+"""tracer-hazard: host-Python operations on traced values inside
+jit/shard_map/vmap/grad/scan bodies.
+
+Inside a traced function, parameters are (potentially) jax tracers.
+`float(x)` / `int(x)` / `bool(x)` force concretization —
+TracerConversionError at best, a silently baked-in constant at worst
+(the class of bug behind pinning gradient traces in
+`engine.sharded_ascent`); `np.*` calls on tracers either fail or fall
+back to host numpy and break the trace; `if`/`while` on a traced value
+is data-dependent Python control flow that jit cannot stage.
+
+Traced functions are discovered project-wide (decorated with
+jax.jit/compat.jit, passed to jit/shard_map/vmap/grad/lax.scan/..., plus
+their lexically nested defs and same-module callees, transitively).
+
+Taint = "may hold a traced array": function parameters — minus declared
+statics (non-array annotations, lru_cache builder keys, jit
+static_argnums/static_argnames; see `_static_params`) — propagated
+through local assignments, subscripts, arithmetic, and jnp/lax calls.
+Deliberately *dropped* at attribute loads (except .real/.imag/.T/.mT/.at)
+— `x.shape[0]`, `cfg.opt_steps`, `layout.schedule` are static metadata —
+and at `isinstance`/`len`/static-identity comparisons (`is`/`is not`),
+the legal static-dispatch patterns this codebase leans on
+(`engine.evolve` branching on the Layout kind). The asymmetry is
+intentional: under-tainting only makes the rule quieter, never noisy.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.engine import Finding, ModuleInfo, Project
+
+RULE_ID = "tracer-hazard"
+
+_CASTS = {"float", "int", "bool", "complex"}
+# attribute loads that still refer to the array's data
+_DATA_ATTRS = {"real", "imag", "T", "mT", "at"}
+# calls whose result is static regardless of argument taint
+_UNTAINTING_CALLS = {
+    "isinstance", "len", "type", "getattr", "hasattr", "id", "repr", "str",
+    "jax.eval_shape", "jnp.shape", "jax.tree_util.tree_structure",
+}
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# annotations that still mean "this is (or may be) a traced array"
+_ARRAYISH = ("Array", "ndarray", "Tensor", "pytree")
+# builders behind these produce lru_cache keys: every param is hashable
+# static config by construction
+_CACHE_DECORATORS = {
+    "repro.compat.cached_program", "compat.cached_program",
+    "functools.lru_cache", "lru_cache", "functools.cache",
+}
+_JIT_DECORATORS = {"jax.jit", "repro.compat.jit", "jax.pmap"}
+
+
+def _static_params(mod: ModuleInfo, fn: ast.AST) -> set[str]:
+    """Params that are static configuration, never tracers.
+
+    Three sources, all conventions this codebase actually keeps:
+      1. a non-array type annotation (``n: int``, ``act: str``,
+         ``mesh: Mesh``) — traced arrays travel unannotated or annotated
+         ``jnp.ndarray`` / ``jax.Array``;
+      2. params of ``compat.cached_program`` / ``lru_cache`` builders —
+         they *are* the cache key, so they are hashable host values;
+      3. ``static_argnums`` / ``static_argnames`` on a jit decorator.
+    """
+    a = fn.args
+    positional = a.posonlyargs + a.args
+    static: set[str] = set()
+    for p in positional + a.kwonlyargs:
+        if p.annotation is not None:
+            text = ast.dump(p.annotation)
+            if not any(t in text for t in _ARRAYISH):
+                static.add(p.arg)
+    for dec in fn.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        qual = mod.qualify(target)
+        if qual in ("functools.partial", "partial") and call and call.args:
+            qual = mod.qualify(call.args[0])
+        if qual in _CACHE_DECORATORS:
+            return {p.arg for p in positional + a.kwonlyargs}
+        if qual in _JIT_DECORATORS and call is not None:
+            for kw in call.keywords:
+                vals = []
+                if isinstance(kw.value, ast.Constant):
+                    vals = [kw.value.value]
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    vals = [
+                        e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                    ]
+                if kw.arg == "static_argnums":
+                    for v in vals:
+                        if isinstance(v, int) and v < len(positional):
+                            static.add(positional[v].arg)
+                elif kw.arg == "static_argnames":
+                    static.update(v for v in vals if isinstance(v, str))
+    return static
+
+
+def walk_shallow(fn: ast.AST):
+    """Walk a function body without descending into nested defs — each
+    nested def is a separate traced entry with its own taint set."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _FuncNode):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+class _Taint:
+    """Flow-insensitive may-be-traced analysis for one function body."""
+
+    def __init__(self, mod: ModuleInfo, fn: ast.AST):
+        self.mod = mod
+        a = fn.args
+        self.tainted: set[str] = {
+            p.arg for p in a.posonlyargs + a.args + a.kwonlyargs
+        }
+        if a.vararg:
+            self.tainted.add(a.vararg.arg)
+        if a.kwarg:
+            self.tainted.add(a.kwarg.arg)
+        self.tainted -= _static_params(mod, fn)
+        # fixpoint over simple assignments; bodies are small
+        changed = True
+        while changed:
+            changed = False
+            for node in walk_shallow(fn):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.For):
+                    targets, value = [node.target], node.iter
+                elif isinstance(node, ast.withitem) and node.optional_vars:
+                    targets, value = [node.optional_vars], node.context_expr
+                else:
+                    continue
+                if not self.is_tainted(value):
+                    continue
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and \
+                                n.id not in self.tainted:
+                            self.tainted.add(n.id)
+                            changed = True
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            return node.attr in _DATA_ATTRS and self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # identity checks are static even on tracers
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            # `"key" in params`: pytree/dict-structure membership, static
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops) \
+                    and isinstance(node.left, ast.Constant) \
+                    and isinstance(node.left.value, str):
+                return False
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, ast.IfExp):
+            return any(
+                self.is_tainted(n) for n in (node.body, node.test, node.orelse)
+            )
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            qual = self.mod.qualify(node.func)
+            if qual in _UNTAINTING_CALLS:
+                return False
+            if self._args_tainted(node):
+                return True
+            # method call on array data (x.at[...].set, cut.at(b), x.sum())
+            if isinstance(node.func, ast.Attribute):
+                return self.is_tainted(node.func)
+            return False
+        return False
+
+    def _args_tainted(self, call: ast.Call) -> bool:
+        return any(self.is_tainted(a) for a in call.args) or any(
+            self.is_tainted(k.value) for k in call.keywords
+        )
+
+
+class TracerHazardRule:
+    id = RULE_ID
+    summary = (
+        "no float/int/bool casts, np.* calls, or data-dependent Python "
+        "control flow on traced values inside jitted/shard_mapped bodies"
+    )
+
+    def check(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for fn in project.functions():
+            if fn.node not in project.traced:
+                continue
+            if not isinstance(fn.node, _FuncNode):
+                continue
+            findings.extend(self._check_fn(fn.module, fn.node, fn.qualname))
+        return findings
+
+    def _check_fn(
+        self, mod: ModuleInfo, fn: ast.AST, qualname: str
+    ) -> list[Finding]:
+        taint = _Taint(mod, fn)
+        symbol = qualname[len(mod.modname) + 1:] if \
+            qualname.startswith(mod.modname + ".") else qualname
+        out: list[Finding] = []
+        for node in walk_shallow(fn):
+            if isinstance(node, ast.Call):
+                qual = mod.qualify(node.func) or ""
+                if qual in _CASTS and taint._args_tainted(node):
+                    out.append(mod.finding(
+                        self.id, node,
+                        f"{qual}() on a traced value concretizes the "
+                        "tracer inside a traced function; use jnp casts "
+                        "or hoist to the host side",
+                        symbol=symbol,
+                    ))
+                elif (qual == "numpy" or qual.startswith("numpy.")) and \
+                        taint._args_tainted(node):
+                    out.append(mod.finding(
+                        self.id, node,
+                        f"host numpy call '{qual}' on a traced value "
+                        "inside a traced function; use jnp",
+                        symbol=symbol,
+                    ))
+            elif isinstance(node, (ast.If, ast.While)):
+                if taint.is_tainted(node.test):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    out.append(mod.finding(
+                        self.id, node,
+                        f"data-dependent Python `{kind}` on a traced "
+                        "value; jit cannot stage it — use lax.cond/"
+                        "lax.while_loop or jnp.where",
+                        symbol=symbol,
+                    ))
+        return out
+
+
+RULE = TracerHazardRule()

@@ -55,7 +55,9 @@ def test_engine_ops_dispatch_per_shard():
     """The sharded hot loop has no direct `ref.*` calls: every
     phase/mixer/cutvals/expectation op reaches the `kernels.ops`-
     dispatched kernels under `pallas_interpret`, agreeing with the xla
-    path (cut tables bitwise; evolved state ulp-tight)."""
+    path (cut tables bitwise; evolved state ulp-tight). This is the
+    runtime half of the contract; the static half is reprolint's
+    `dispatch-purity` rule (src/repro/analysis, docs/ANALYSIS.md)."""
     res = _run_check("engine_interpret")
     for key, ok in res.items():
         assert ok, f"{key}: {res}"
