@@ -45,6 +45,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request SLA deadline in seconds (omit for "
                     "best-quality planning)")
+    ap.add_argument("--floor-quality", type=float, default=None,
+                    help="per-request accuracy floor (planner quality "
+                    "scale): deadline downgrades never re-plan below it, "
+                    "and admission sheds when even the floor plan is "
+                    "predicted to miss the deadline (DESIGN.md §6.6)")
+    ap.add_argument("--no-enforce-sla", action="store_true",
+                    help="disable §6.6 deadline enforcement (downgrade/"
+                    "shed/expire); predicted-late requests are admitted "
+                    "and served late, as in the pre-enforcement service")
     ap.add_argument("--target-quality", type=float, default=None,
                     help="per-request accuracy-proxy target (planner "
                     "quality scale); the planner meets it at minimum "
@@ -118,9 +127,11 @@ def run(argv=None):
             mesh=mesh_spec,
             max_inflight=args.max_inflight,
             recalibrate=not args.no_recalibrate,
+            enforce_deadlines=not args.no_enforce_sla,
         )
     )
-    sla = SLA(deadline_s=args.deadline, target_quality=args.target_quality)
+    sla = SLA(deadline_s=args.deadline, target_quality=args.target_quality,
+              floor_quality=args.floor_quality)
 
     def on_update(rid, level, n_levels, cut):
         print(f"[serve_maxcut]   req {rid} level {level}/{n_levels}: "
@@ -138,17 +149,30 @@ def run(argv=None):
 
     for g, rid in zip(requests, rids):
         r = svc.results[rid]
+        if r.status != "completed":
+            # shed at admission (floor plan predicted late) or expired
+            # pre-dispatch — no cut was served (DESIGN.md §6.6)
+            print(f"[serve_maxcut] req {rid} ({r.tenant}): n={g.n} "
+                  f"{r.status.upper()} after {r.latency_s:.2f}s")
+            continue
         kn = r.plan.knobs
         src = "cache" if r.cached else (
             f"N={kn.n_qubits} K={kn.top_k} T={kn.opt_steps} W={kn.beam_width}"
         )
+        tail = f" [{r.downgrades} downgrade(s)]" if r.downgrades else ""
         print(f"[serve_maxcut] req {rid} ({r.tenant}): n={g.n} "
-              f"cut={r.cut_value:.0f} latency={r.latency_s:.2f}s ({src})")
+              f"cut={r.cut_value:.0f} latency={r.latency_s:.2f}s ({src})"
+              f"{tail}")
 
     lat = sorted(r.latency_s for r in svc.results.values())
     p50 = lat[len(lat) // 2]
+    st = svc.stats
     print(f"[serve_maxcut] {len(rids)} requests in {wall:.2f}s "
           f"({len(rids) / wall:.2f} req/s), p50 latency {p50:.2f}s")
+    if args.deadline is not None and not args.no_enforce_sla:
+        print(f"[serve_maxcut] sla: attainment={st.attainment:.3f} "
+              f"completed={st.completed} shed={st.shed} "
+              f"expired={st.expired} downgrades={st.downgrade_events}")
     print(f"[serve_maxcut] backend: {svc.backend.describe()}")
     print(f"[serve_maxcut] batching: {svc.stats.as_dict()}")
     print(f"[serve_maxcut] cache: {svc.cache.stats.as_dict()}")

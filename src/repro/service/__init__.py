@@ -13,6 +13,7 @@ from repro.service.planner import (
     KnobPlan,
     KnobTuple,
     Planner,
+    ReplanDecision,
     quality_score,
 )
 from repro.service.scheduler import (
@@ -22,6 +23,13 @@ from repro.service.scheduler import (
     SolveService,
     TenantStats,
     edge_capacity,
+)
+from repro.service.workload import (
+    Arrival,
+    VirtualClock,
+    arrival_trace,
+    run_soak_virtual,
+    run_soak_wall,
 )
 
 __all__ = [
@@ -39,6 +47,7 @@ __all__ = [
     "KnobPlan",
     "KnobTuple",
     "Planner",
+    "ReplanDecision",
     "quality_score",
     "RequestResult",
     "ServiceConfig",
@@ -46,4 +55,9 @@ __all__ = [
     "SolveService",
     "TenantStats",
     "edge_capacity",
+    "Arrival",
+    "VirtualClock",
+    "arrival_trace",
+    "run_soak_virtual",
+    "run_soak_wall",
 ]

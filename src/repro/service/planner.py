@@ -86,10 +86,39 @@ class KnobPlan(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class SLA:
-    """Per-request service-level objective. `None` means unconstrained."""
+    """Per-request service-level objective. `None` means unconstrained.
+
+    ``floor_quality`` is the *hard* accuracy floor of the deadline
+    enforcement path (DESIGN.md §6.6): a downgrade re-plan may walk the
+    knob lattice down only to tuples whose `quality_score` still meets
+    it, and a request whose floor plan is predicted to miss the residual
+    deadline is shed rather than served below the floor.
+    ``target_quality`` remains the *soft* target `plan` optimizes for.
+    """
 
     deadline_s: float | None = None
     target_quality: float | None = None
+    floor_quality: float | None = None
+
+
+class ReplanDecision(NamedTuple):
+    """Outcome of a deadline re-score (DESIGN.md §6.6).
+
+    ``verdict`` is one of:
+      - ``"keep"``      — the current plan is still predicted to meet the
+                          residual budget; ``plan`` is the current plan;
+      - ``"downgrade"`` — the current plan is predicted late but a
+                          floor-meeting tuple fits; ``plan`` is the new
+                          (cheaper) plan;
+      - ``"shed"``      — even the floor plan is predicted late (or the
+                          declared floor is unreachable in the grid);
+                          ``plan`` is None.
+    """
+
+    verdict: str
+    plan: "KnobPlan | None"
+    floor_predicted_s: float  # the floor plan's predicted total (inf if
+    #                           the floor is unreachable in the grid)
 
 
 def quality_score(knobs: KnobTuple) -> float:
@@ -342,6 +371,79 @@ class Planner:
             / max(work, 1),
         )
 
+    def _lattice(self, floor_quality: float | None) -> list[KnobTuple]:
+        """The knob lattice a request may occupy: grid tuples meeting the
+        declared hard accuracy floor. An unreachable floor returns [] —
+        the caller decides between shed (deadline enforcement) and
+        best-effort (no deadline)."""
+        if floor_quality is None:
+            return self.grid
+        return [
+            kn for kn in self.grid
+            if quality_score(kn) >= floor_quality - 1e-12
+        ]
+
+    def floor_predicted(
+        self, n_vertices: int, n_edges: int, floor_quality: float | None
+    ) -> tuple[KnobTuple, StageCost] | None:
+        """The *floor plan*: the cheapest-predicted tuple still meeting
+        the declared accuracy floor — the last stop on the downgrade
+        lattice before shedding. None when the floor is unreachable in
+        the grid (no tuple scores high enough)."""
+        lattice = self._lattice(floor_quality)
+        if not lattice:
+            return None
+        return min(
+            ((kn, self.cost_model.predict(n_vertices, n_edges, kn))
+             for kn in lattice),
+            key=lambda s: (s[1].total_s, s[0]),
+        )
+
+    def replan(
+        self,
+        n_vertices: int,
+        n_edges: int,
+        budget_s: float,
+        current: KnobPlan,
+        floor_quality: float | None = None,
+    ) -> ReplanDecision:
+        """Re-score one queued request against its residual wall-clock
+        budget (DESIGN.md §6.6).
+
+        Keep the current plan while it is still predicted to fit the
+        budget. Otherwise walk the knob lattice to the cheapest-predicted
+        floor-meeting tuple that fits — the cost model has already been
+        wrong once for this request (its original prediction no longer
+        holds), so a downgrade maximizes safety margin instead of
+        squeezing quality; ties break toward higher quality, then the
+        tuple. When even the floor plan is predicted late, the verdict is
+        shed. Monotone in the budget by construction: the kept plan's
+        predicted time is fixed, the downgrade target is the lattice-wide
+        minimum, and a shrinking budget can only move keep → downgrade →
+        shed, never backward in predicted time.
+        """
+        floor = self.floor_predicted(n_vertices, n_edges, floor_quality)
+        if floor is None:  # declared floor unreachable in the grid
+            return ReplanDecision("shed", None, float("inf"))
+        floor_s = floor[1].total_s
+        cur_pred = self.cost_model.predict(n_vertices, n_edges, current.knobs)
+        if cur_pred.total_s <= budget_s:
+            return ReplanDecision("keep", current, floor_s)
+        if floor_s > budget_s:
+            return ReplanDecision("shed", None, floor_s)
+        scored = [
+            (kn, self.cost_model.predict(n_vertices, n_edges, kn),
+             quality_score(kn))
+            for kn in self._lattice(floor_quality)
+        ]
+        feasible = [s for s in scored if s[1].total_s <= budget_s]
+        choice = min(feasible, key=lambda s: (s[1].total_s, -s[2], s[0]))
+        plan = self._finish(
+            choice, n_vertices, True,
+            choice[2] >= (floor_quality or -math.inf), SLA(),
+        )
+        return ReplanDecision("downgrade", plan, floor_s)
+
     def plan(self, n_vertices: int, n_edges: int, sla: SLA = SLA()) -> KnobPlan:
         """Pick knobs for one request.
 
@@ -351,10 +453,15 @@ class Planner:
         at all, the fastest tuple (best effort). Ties break toward lower
         predicted time, then the knob tuple itself, so planning is
         deterministic — and tightening the deadline can only move the
-        choice to an equal-or-faster-predicted tuple.
+        choice to an equal-or-faster-predicted tuple. A declared
+        ``sla.floor_quality`` restricts the candidate lattice to
+        floor-meeting tuples (an unreachable floor falls back to the full
+        grid — the shed decision belongs to the scheduler's enforcement
+        path, not to planning).
         """
+        lattice = self._lattice(sla.floor_quality) or self.grid
         scored = []
-        for kn in self.grid:
+        for kn in lattice:
             pred = self.cost_model.predict(n_vertices, n_edges, kn)
             scored.append((kn, pred, quality_score(kn)))
 

@@ -43,6 +43,24 @@ tenant's traffic (bounded-delay property, tests/test_service_stress.py).
 Served-request stage timings stream back into the planner's cost model
 (`Planner.observe_*`, §6.5) so knob selection tracks the hardware the
 service actually runs on, not the shipped benchmark fit.
+
+Deadline enforcement (§6.6): every clock read goes through one injected
+time source (``SolveService(clock=...)``, default `time.perf_counter` —
+a `workload.VirtualClock` makes whole soaks bit-deterministic). A
+request's deadline becomes an absolute clock stamp at submission;
+admission plans against the *residual* budget and sheds outright when
+even the floor plan (`Planner.floor_predicted`) is predicted late. Each
+`pump` tick then re-scores queued-but-undispatched requests against
+their remaining budget with the live (recalibrated) cost model:
+`Planner.replan` keeps, downgrades (re-partition at the cheaper knobs —
+never below the request's declared `SLA.floor_quality`), or clamps to
+the floor plan. Once admitted, a request is never shed on a prediction
+alone — predictions drift with recalibration; it is dropped (terminal
+state ``"expired"``) only when its deadline has actually passed before
+any of its subgraphs dispatched. Every request therefore reaches exactly
+one terminal state — completed / shed / expired — and `ServiceStats`
+carries exact per-tenant attainment, shed, and downgrade accounting
+(tests/test_service_sla.py).
 """
 
 from __future__ import annotations
@@ -63,7 +81,7 @@ from repro.core.partition import partition_for_solver
 from repro.service.backend import make_backend
 from repro.service.cache import ResultCache
 from repro.service.canonical import canonical_form
-from repro.service.planner import SLA, KnobPlan, Planner
+from repro.service.planner import SLA, KnobPlan, Planner, quality_score
 
 
 def edge_capacity(n_qubits: int) -> int:
@@ -87,13 +105,20 @@ class ServiceConfig:
     tenant_max_slots: int | None = None  # per-tenant slot cap under contention
     # §6.5 online recalibration: stream stage timings into the planner
     recalibrate: bool = True
+    # §6.6 wall-clock SLA enforcement: shed predicted-late requests at
+    # admission, re-score queued requests every tick (downgrade toward
+    # the accuracy floor), and expire requests whose deadline passes
+    # before dispatch. Off = the pre-§6.6 load-driven behavior (the
+    # throughput-parity benches pin it off: a shed request has no cut to
+    # compare)
+    enforce_deadlines: bool = True
 
 
 @dataclasses.dataclass
 class RequestResult:
     request_id: int
-    assignment: np.ndarray
-    cut_value: float
+    assignment: np.ndarray  # None for shed/expired requests
+    cut_value: float  # nan for shed/expired requests
     cached: bool
     plan: KnobPlan
     latency_s: float
@@ -101,11 +126,18 @@ class RequestResult:
     anytime: list  # [(level, n_levels, best_known_cut)] for streamed requests
     tenant: str = "default"
     dispatches_waited: int = 0  # dispatches between admission and completion
+    # §6.6 terminal state: "completed" | "shed" | "expired" — exactly one
+    # per submitted request
+    status: str = "completed"
+    # None for undeadlined requests; else whether the deadline was met
+    # (False for shed/expired)
+    deadline_met: bool | None = None
+    downgrades: int = 0  # deadline re-plans applied before completion
 
 
 class _Request:
     def __init__(self, rid, graph, sla, plan, cfg, stream, on_update, form,
-                 tenant):
+                 tenant, submit_t, deadline_t=None):
         self.id = rid
         self.graph = graph
         self.sla = sla
@@ -115,12 +147,15 @@ class _Request:
         self.on_update = on_update
         self.form = form  # canonical form, when the cache is enabled
         self.tenant = tenant
-        self.submit_t = time.perf_counter()
+        self.submit_t = submit_t
+        self.deadline_t = deadline_t  # absolute clock stamp, or None
         self.part = None
         self.bit_indices = None  # (M, K) int64
         self.remaining = 0
         self.solve_done_t = None
         self.admit_dispatch = 0  # stats.dispatches at admission
+        self.started = False  # any subgraph dispatched (re-plan barrier)
+        self.downgrades = 0  # §6.6 deadline re-plans applied
 
 
 class _Item:
@@ -146,19 +181,53 @@ class _Batch:
         self.t_issue = t_issue
 
 
+class _SLACounters:
+    """§6.6 terminal-state + attainment accounting, shared by the global
+    and per-tenant stats so the two cannot drift apart structurally.
+
+    Every submitted request lands in exactly one terminal bucket —
+    ``completed`` / ``shed`` / ``expired`` — so attainment denominators
+    are exact (the latent pre-§6.6 gap: stats were recorded only for
+    completed requests). Among *deadlined* requests, ``sla_met`` /
+    ``sla_missed`` split the completed bucket; undeadlined completions
+    count in neither. Attainment is met-over-all-deadlined — shed and
+    expired requests count against it.
+    """
+
+    @property
+    def terminal(self) -> int:
+        return self.completed + self.shed + self.expired
+
+    @property
+    def deadlined(self) -> int:
+        return self.sla_met + self.sla_missed + self.shed + self.expired
+
+    @property
+    def attainment(self) -> float:
+        d = self.deadlined
+        return self.sla_met / d if d else 1.0
+
+
 @dataclasses.dataclass
-class TenantStats:
+class TenantStats(_SLACounters):
     submitted: int = 0
     completed: int = 0
     cache_served: int = 0
     slots: int = 0  # solver slots this tenant's subgraphs occupied
+    shed: int = 0  # predicted-late at admission, never enqueued
+    expired: int = 0  # deadline passed while queued, dropped
+    downgraded: int = 0  # completed after >= 1 deadline re-plan
+    sla_met: int = 0  # completed within the deadline
+    sla_missed: int = 0  # completed, but late
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["attainment"] = round(self.attainment, 4)
+        return d
 
 
 @dataclasses.dataclass
-class ServiceStats:
+class ServiceStats(_SLACounters):
     dispatches: int = 0
     slots_total: int = 0
     slots_filled: int = 0
@@ -167,6 +236,12 @@ class ServiceStats:
     admitted: int = 0
     preemptions: int = 0  # anti-starvation bucket picks
     max_inflight_seen: int = 0
+    shed: int = 0
+    expired: int = 0
+    downgraded: int = 0  # requests completed after >= 1 downgrade
+    downgrade_events: int = 0  # individual deadline re-plans applied
+    sla_met: int = 0
+    sla_missed: int = 0
     tenants: dict = dataclasses.field(default_factory=dict)
 
     def tenant(self, name: str) -> TenantStats:
@@ -189,6 +264,13 @@ class ServiceStats:
             "admitted": self.admitted,
             "preemptions": self.preemptions,
             "max_inflight_seen": self.max_inflight_seen,
+            "shed": self.shed,
+            "expired": self.expired,
+            "downgraded": self.downgraded,
+            "downgrade_events": self.downgrade_events,
+            "sla_met": self.sla_met,
+            "sla_missed": self.sla_missed,
+            "attainment": round(self.attainment, 4),
             "tenants": {t: s.as_dict() for t, s in self.tenants.items()},
         }
 
@@ -202,8 +284,14 @@ class SolveService:
         planner: Planner | None = None,
         cache: ResultCache | None = None,
         backend=None,
+        clock: Callable[[], float] | None = None,
     ):
         self.config = config
+        # §6.6: the single time source every deadline decision and every
+        # latency/observability stamp reads. Injecting a
+        # `workload.VirtualClock` makes a whole soak bit-deterministic;
+        # the default is the same monotonic clock as before
+        self._clock = clock if clock is not None else time.perf_counter
         self.planner = planner or Planner(
             max_qubits=config.max_qubits, batch_slots=config.batch_slots
         )
@@ -255,11 +343,17 @@ class SolveService:
         self._next_id += 1
         self.stats.tenant(tenant).submitted += 1
         self._admission.append(
-            (rid, graph, sla, stream, on_update, tenant, time.perf_counter())
+            (rid, graph, sla, stream, on_update, tenant, self._clock())
         )
         if not defer:
             self._process_admissions()
         return rid
+
+    def _budget(self, sla: SLA, t0: float, now: float) -> float | None:
+        """Residual wall-clock budget, or None for undeadlined requests."""
+        if sla.deadline_s is None:
+            return None
+        return t0 + sla.deadline_s - now
 
     def _process_admissions(self) -> None:
         while self._admission:
@@ -267,7 +361,15 @@ class SolveService:
                 self._admission.popleft()
             )
             self.stats.admitted += 1
-            plan = self.planner.plan(graph.n, graph.n_edges, sla)
+            # §6.6: plan against the budget *remaining now* — a deferred
+            # request that waited on the admission queue plans (and is
+            # shed-checked) at its shrunken residual deadline
+            now = self._clock()
+            budget = self._budget(sla, t0, now)
+            eff_sla = sla if budget is None else dataclasses.replace(
+                sla, deadline_s=max(budget, 0.0)
+            )
+            plan = self.planner.plan(graph.n, graph.n_edges, eff_sla)
             form = None
             if self.config.enable_cache:
                 form = canonical_form(graph)
@@ -279,8 +381,16 @@ class SolveService:
                     self._record_cached(
                         rid, graph, plan, assignment, cut, t0,
                         stream=stream, on_update=on_update, tenant=tenant,
+                        deadline_t=None if sla.deadline_s is None
+                        else t0 + sla.deadline_s,
                     )
                     continue
+            # shed verdict before any work is enqueued (but after the
+            # cache: a hit completes instantly, predicted-late or not)
+            if self._shed_if_floor_late(rid, graph, sla, plan, budget, t0,
+                                        tenant):
+                continue
+            if form is not None:
                 # coalesce onto an in-flight isomorphic twin of sufficient
                 # quality: no work enqueued; served from cache at its merge.
                 # Streaming requests bypass dedup — they want per-level
@@ -292,22 +402,43 @@ class SolveService:
                     )
                     continue
 
-            self._admit(rid, graph, sla, plan, form, stream, on_update, tenant)
+            self._admit(rid, graph, sla, plan, form, stream, on_update,
+                        tenant, t0)
+
+    def _shed_if_floor_late(self, rid, graph, sla, plan, budget, t0,
+                            tenant) -> bool:
+        """§6.6 admission verdict: True (and a recorded ``"shed"``
+        terminal) when even the floor plan is predicted to miss the
+        residual budget."""
+        if (not self.config.enforce_deadlines) or budget is None:
+            return False
+        floor = self.planner.floor_predicted(
+            graph.n, graph.n_edges, sla.floor_quality
+        )
+        floor_s = floor[1].total_s if floor is not None else float("inf")
+        if floor_s <= budget:
+            return False
+        self._record_dropped(rid, plan, t0, tenant, "shed",
+                             predicted_floor_s=floor_s, budget_s=budget)
+        return True
 
     def _admit(self, rid, graph, sla, plan, form, stream, on_update,
-               tenant="default") -> None:
+               tenant="default", t0=None) -> None:
         """Enqueue a request's subgraphs into its shape bucket."""
         kn = plan.knobs
         cfg = plan.to_config()
+        if t0 is None:
+            t0 = self._clock()
+        deadline_t = None if sla.deadline_s is None else t0 + sla.deadline_s
         req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form,
-                       tenant)
-        t_part0 = time.perf_counter()
+                       tenant, t0, deadline_t)
+        t_part0 = self._clock()
         req.part = partition_for_solver(graph, kn.n_qubits)
         if self.config.recalibrate:
             observe = getattr(self.planner, "observe_partition", None)
             if observe is not None:
                 observe(graph.n, graph.n_edges,
-                        time.perf_counter() - t_part0)
+                        self._clock() - t_part0)
         req.bit_indices = np.zeros((req.part.m, kn.top_k), dtype=np.int64)
         req.remaining = req.part.m
         req.admit_dispatch = self.stats.dispatches
@@ -322,14 +453,15 @@ class SolveService:
 
     def _record_cached(
         self, rid, graph, plan, assignment, cut, t0,
-        stream=False, on_update=None, tenant="default",
+        stream=False, on_update=None, tenant="default", deadline_t=None,
     ) -> None:
         # a streamed request served from cache still gets its anytime
         # contract: one final update (the answer is complete immediately)
         anytime = [(1, 1, cut)] if stream else []
         if stream and on_update is not None:
             on_update(rid, 1, 1, cut)
-        now = time.perf_counter()
+        now = self._clock()
+        met = None if deadline_t is None else bool(now <= deadline_t)
         self.results[rid] = RequestResult(
             request_id=rid,
             assignment=assignment,
@@ -340,12 +472,49 @@ class SolveService:
             timings={"cache_s": now - t0},
             anytime=anytime,
             tenant=tenant,
+            deadline_met=met,
         )
         self.stats.completed += 1
         self.stats.cache_served += 1
         ts = self.stats.tenant(tenant)
         ts.completed += 1
         ts.cache_served += 1
+        self._count_deadline(met, ts)
+
+    def _count_deadline(self, met: bool | None, ts: TenantStats) -> None:
+        if met is None:
+            return
+        field = "sla_met" if met else "sla_missed"
+        setattr(self.stats, field, getattr(self.stats, field) + 1)
+        setattr(ts, field, getattr(ts, field) + 1)
+
+    def _record_dropped(self, rid, plan, t0, tenant, status, *,
+                        predicted_floor_s=None, budget_s=None) -> None:
+        """§6.6 non-served terminal states: ``"shed"`` (admission verdict
+        — even the floor plan predicted late) and ``"expired"`` (deadline
+        passed while queued). The recorded timings carry the verdict's
+        evidence so tests can assert shed ⇒ floor-predicted-late."""
+        now = self._clock()
+        timings = {"verdict_s": now - t0}
+        if predicted_floor_s is not None:
+            timings["predicted_floor_s"] = predicted_floor_s
+            timings["budget_s"] = budget_s
+        self.results[rid] = RequestResult(
+            request_id=rid,
+            assignment=None,
+            cut_value=float("nan"),
+            cached=False,
+            plan=plan,
+            latency_s=now - t0,
+            timings=timings,
+            anytime=[],
+            tenant=tenant,
+            status=status,
+            deadline_met=False,
+        )
+        ts = self.stats.tenant(tenant)
+        setattr(self.stats, status, getattr(self.stats, status) + 1)
+        setattr(ts, status, getattr(ts, status) + 1)
 
     # --------------------------------------------------------- dispatch --
     def _pick_bucket(self):
@@ -433,7 +602,9 @@ class SolveService:
             n_rows=slots,
         )
         res = self.backend.solve_batch(qcfg, edges, weights, masks)
-        self._inflight.append(_Batch(qcfg, items, res, time.perf_counter()))
+        self._inflight.append(_Batch(qcfg, items, res, self._clock()))
+        for it in items:
+            it.req.started = True  # §6.6: committed — no more re-plans
 
         self.stats.dispatches += 1
         self.stats.slots_total += slots
@@ -450,7 +621,7 @@ class SolveService:
         unblocks."""
         batch = self._inflight.popleft()
         bitstrings = np.asarray(batch.result.bitstrings)  # blocks here
-        t_land = time.perf_counter()
+        t_land = self._clock()
         if self.config.recalibrate:
             observe = getattr(self.planner, "observe_solve", None)
             if observe is not None:
@@ -473,16 +644,126 @@ class SolveService:
             if it.req.remaining == 0:
                 done_requests.append(it.req)
         for req in done_requests:
-            req.solve_done_t = time.perf_counter()
+            req.solve_done_t = self._clock()
             self._merge(req)
+
+    # --------------------------------------------------- §6.6 re-scoring --
+    def _rescore_queued(self) -> None:
+        """§6.6: one deadline pass over queued-but-undispatched requests.
+
+        Expired deadlines drop the request (terminal ``"expired"``);
+        otherwise `Planner.replan` re-scores the residual budget against
+        the live (possibly recalibrated) cost model — keep, downgrade to
+        the cheapest floor-meeting plan, or — on a shed verdict for an
+        *already admitted* request — clamp to the floor plan instead of
+        shedding: predictions drift with recalibration, so admission is
+        the only place a prediction alone may reject work
+        (tests/test_service_stress.py's recalibration-under-load case).
+        Requests with any subgraph dispatched are committed (work would
+        be discarded) and complete at their admitted knobs.
+        """
+        if not self.config.enforce_deadlines:
+            return
+        now = self._clock()
+        for req in list(self._active.values()):
+            if req.deadline_t is None or req.started:
+                continue
+            budget = req.deadline_t - now
+            if budget <= 0.0:
+                self._expire(req)
+                continue
+            decision = self.planner.replan(
+                req.graph.n, req.graph.n_edges, budget, req.plan,
+                floor_quality=req.sla.floor_quality,
+            )
+            if decision.verdict == "keep":
+                continue
+            if decision.verdict == "downgrade":
+                self._apply_downgrade(req, decision.plan)
+                continue
+            # shed verdict post-admission: clamp to the floor plan (the
+            # cheapest floor-meeting tuple) rather than retroactively shed
+            floor = self.planner.floor_predicted(
+                req.graph.n, req.graph.n_edges, req.sla.floor_quality
+            )
+            if floor is not None and floor[0] != req.plan.knobs:
+                kn, pred = floor
+                plan = KnobPlan(
+                    knobs=kn,
+                    merge_level=req.plan.merge_level,
+                    predicted=pred,
+                    quality=quality_score(kn),
+                    meets_deadline=False,
+                    meets_quality=req.sla.floor_quality is None
+                    or quality_score(kn) >= req.sla.floor_quality - 1e-12,
+                )
+                self._apply_downgrade(req, plan)
+
+    def _apply_downgrade(self, req: _Request, plan: KnobPlan) -> None:
+        """Re-plan one queued request to cheaper knobs: pull its items
+        from the old shape bucket, re-partition at the new qubit budget,
+        and enqueue into the new bucket. Only legal before any of its
+        subgraphs dispatched (`req.started` guards)."""
+        old_qcfg = req.cfg.qaoa_config()
+        queue = self._buckets.get(old_qcfg)
+        if queue is not None:
+            keep = [it for it in queue if it.req is not req]
+            queue.clear()
+            queue.extend(keep)
+        req.plan = plan
+        req.cfg = plan.to_config()
+        req.part = partition_for_solver(req.graph, plan.knobs.n_qubits)
+        req.bit_indices = np.zeros(
+            (req.part.m, plan.knobs.top_k), dtype=np.int64
+        )
+        req.remaining = req.part.m
+        req.downgrades += 1
+        self.stats.downgrade_events += 1
+        # new twins must not coalesce onto a primary that now plans
+        # cheaper than they require
+        if req.form is not None:
+            primary = self._inflight_forms.get(req.form.key)
+            if primary is not None and primary[0] == req.id:
+                self._inflight_forms[req.form.key] = (req.id, plan.quality)
+        new_queue = self._buckets.setdefault(req.cfg.qaoa_config(), deque())
+        for idx in range(req.part.m):
+            new_queue.append(_Item(req, idx, self.stats.dispatches))
+
+    def _expire(self, req: _Request) -> None:
+        """Drop one queued request whose deadline passed before dispatch
+        (terminal ``"expired"``), and release its coalesced followers
+        back through admission-style re-scoring."""
+        queue = self._buckets.get(req.cfg.qaoa_config())
+        if queue is not None:
+            keep = [it for it in queue if it.req is not req]
+            queue.clear()
+            queue.extend(keep)
+        self._record_dropped(req.id, req.plan, req.submit_t, req.tenant,
+                             "expired")
+        del self._active[req.id]
+        if req.form is not None:
+            primary = self._inflight_forms.get(req.form.key)
+            if primary is not None and primary[0] == req.id:
+                self._inflight_forms.pop(req.form.key, None)
+            for frid, g, sla, plan, form, t0, tenant in self._followers.pop(
+                req.form.key, []
+            ):
+                budget = self._budget(sla, t0, self._clock())
+                if not self._shed_if_floor_late(frid, g, sla, plan, budget,
+                                                t0, tenant):
+                    self._admit(frid, g, sla, plan, form, False, None,
+                                tenant=tenant, t0=t0)
 
     # ------------------------------------------------------------- solve --
     def pump(self) -> bool:
         """One deterministic event-loop tick: drain the admission queue,
-        fill the dispatch window (up to ``max_inflight`` batches issued
-        without blocking), then harvest the oldest in-flight batch and
-        run any merges it unblocks. Returns True while work remains."""
+        re-score queued requests against their residual deadlines (§6.6:
+        downgrade / expire before dispatch), fill the dispatch window (up
+        to ``max_inflight`` batches issued without blocking), then
+        harvest the oldest in-flight batch and run any merges it
+        unblocks. Returns True while work remains."""
         self._process_admissions()
+        self._rescore_queued()
         window = max(self.config.max_inflight, 1)  # 0 would never dispatch
         while len(self._inflight) < window:
             if not self._dispatch_one():
@@ -529,7 +810,7 @@ class SolveService:
             if req.on_update is not None:
                 req.on_update(req.id, 1, 1, cut)
 
-        now = time.perf_counter()
+        now = self._clock()
         if self.config.recalibrate:
             observe = getattr(self.planner, "observe_merge", None)
             if observe is not None:
@@ -543,6 +824,7 @@ class SolveService:
                 quality=req.plan.quality,
                 form=req.form,
             )
+        met = None if req.deadline_t is None else bool(now <= req.deadline_t)
         self.results[req.id] = RequestResult(
             request_id=req.id,
             assignment=np.asarray(assignment),
@@ -558,9 +840,16 @@ class SolveService:
             anytime=anytime,
             tenant=req.tenant,
             dispatches_waited=self.stats.dispatches - req.admit_dispatch,
+            deadline_met=met,
+            downgrades=req.downgrades,
         )
         self.stats.completed += 1
-        self.stats.tenant(req.tenant).completed += 1
+        ts = self.stats.tenant(req.tenant)
+        ts.completed += 1
+        self._count_deadline(met, ts)
+        if req.downgrades:
+            self.stats.downgraded += 1
+            ts.downgraded += 1
         del self._active[req.id]
 
         # serve coalesced isomorphic followers from the just-stored entry
@@ -571,10 +860,18 @@ class SolveService:
             ):
                 hit = self.cache.lookup(g, form=form, min_quality=plan.quality)
                 if hit is not None:
-                    self._record_cached(frid, g, plan, hit[0], hit[1], t0,
-                                        tenant=tenant)
+                    self._record_cached(
+                        frid, g, plan, hit[0], hit[1], t0, tenant=tenant,
+                        deadline_t=None if sla.deadline_s is None
+                        else t0 + sla.deadline_s,
+                    )
                 else:
-                    # canonical-key collision surfaced by the cache's
-                    # re-score: solve the follower for real
-                    self._admit(frid, g, sla, plan, form, False, None,
-                                tenant=tenant)
+                    # canonical-key collision (or a primary downgraded
+                    # below this follower's required quality) surfaced by
+                    # the cache's gate: solve the follower for real,
+                    # re-scored against its own residual budget
+                    budget = self._budget(sla, t0, self._clock())
+                    if not self._shed_if_floor_late(frid, g, sla, plan,
+                                                    budget, t0, tenant):
+                        self._admit(frid, g, sla, plan, form, False, None,
+                                    tenant=tenant, t0=t0)

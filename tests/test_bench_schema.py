@@ -16,6 +16,7 @@ EXPECTED_FILES = {
     "BENCH_distributed.json",
     "BENCH_service.json",
     "BENCH_service_mesh.json",
+    "BENCH_service_sla.json",
     "BENCH_sharded_engine.json",
 }
 
@@ -106,6 +107,45 @@ def test_service_rows_carry_load_metrics():
     big = [r for r in speedups if r["load"] >= 4]
     assert big and all(r["speedup"] >= 1.5 for r in big), speedups
     assert all(r["cut_equal"] for r in speedups)
+
+
+def test_service_sla_rows_carry_attainment_claims():
+    """The §6.6 suite (§Perf C9) must chart attainment/shed/downgrade/p99
+    against >= 3 offered-load points, each row carrying the
+    `attainment_ge_threshold` claim column and exact per-tenant
+    terminal-state accounting — and the claim must hold at the calibrated
+    (lowest offered load) point."""
+    path = RESULTS / "BENCH_service_sla.json"
+    payload = json.loads(path.read_text())
+    rows = [r for r in payload["rows"] if r.get("mode") == "sla_soak"]
+    assert len(rows) >= 3, "need >= 3 offered-load points"
+    assert len({r["offered_rps"] for r in rows}) >= 3
+    for row in rows:
+        for key in ("offered_rps", "attainment", "shed_rate", "expired_rate",
+                    "downgrade_rate", "p50_s", "p99_s",
+                    "attainment_threshold", "attainment_ge_threshold",
+                    "calibrated", "tenants"):
+            assert key in row, f"{row['name']}: missing {key}"
+        assert 0.0 <= row["attainment"] <= 1.0, row["name"]
+        assert isinstance(row["attainment_ge_threshold"], bool), row["name"]
+        # terminal accounting is exact: completed+shed+expired == offered,
+        # globally and per tenant (summing to the global buckets)
+        assert row["completed"] + row["shed"] + row["expired"] == row["load"]
+        for field in ("completed", "shed", "expired", "sla_met", "sla_missed"):
+            total = sum(t[field] for t in row["tenants"].values())
+            if field in row:
+                assert total == row[field], f"{row['name']}: {field}"
+        for t in row["tenants"].values():
+            assert t["completed"] + t["shed"] + t["expired"] == t["submitted"]
+    calibrated = [r for r in rows if r["calibrated"]]
+    assert calibrated, "missing the calibrated (lowest-load) row"
+    lowest = min(rows, key=lambda r: r["offered_rps"])
+    assert lowest["calibrated"] is True
+    for row in calibrated:
+        assert row["attainment_ge_threshold"] is True, (
+            f"{row['name']}: attainment {row['attainment']} below "
+            f"threshold {row['attainment_threshold']} at the calibrated load"
+        )
 
 
 def test_service_mesh_rows_carry_parity_and_async_claims():
