@@ -50,6 +50,7 @@ import numpy as np
 from benchmarks.common import emit, write_bench_json
 from repro.core import ParaQAOAConfig, solve
 from repro.core.graph import Graph
+from repro.obs.metrics import percentile
 from repro.service import SLA, Planner, ServiceConfig, SolveService
 from repro.service.workload import request_mix, tenant_mix
 
@@ -59,9 +60,10 @@ def _cfg_from_plan(plan) -> ParaQAOAConfig:
 
 
 def _latency_row(name, mode, load, wall, latencies, **extra):
-    lat = sorted(latencies)
-    p50 = lat[len(lat) // 2]
-    p99 = lat[min(len(lat) - 1, max(int(np.ceil(0.99 * len(lat))) - 1, 0))]
+    # §8: percentiles come from the shared obs helper (exact nearest-rank),
+    # the same math behind every Histogram.summary() in the service stats
+    p50 = percentile(latencies, 0.5)
+    p99 = percentile(latencies, 0.99)
     tput = load / wall if wall > 0 else 0.0
     return {
         "name": name,
@@ -298,7 +300,11 @@ def run_sla_soak(loads=(1.0, 4.0, 16.0, 64.0), requests=120, n_range=(10, 24),
     from repro.core import qaoa as qaoa_mod
     from repro.core.partition import partition_for_solver
     from repro.service import edge_capacity, make_backend
-    from repro.service.workload import arrival_trace, run_soak_wall
+    from repro.service.workload import (
+        arrival_trace,
+        latency_summary,
+        run_soak_wall,
+    )
 
     # pre-compile every solver program the planner could pick at the
     # scheduler's exact batch shapes (the program cache is global, keyed
@@ -355,10 +361,10 @@ def run_sla_soak(loads=(1.0, 4.0, 16.0, 64.0), requests=120, n_range=(10, 24),
         st = svc.stats
         assert st.terminal == len(trace), "request missing a terminal state"
         n_req = len(res)
-        lat = sorted(r.latency_s for r in res if r.status == "completed")
-        lat = lat or [0.0]
-        p50 = lat[len(lat) // 2]
-        p99 = lat[min(len(lat) - 1, max(int(np.ceil(0.99 * len(lat))) - 1, 0))]
+        # §8: completed-request percentiles straight from the service's
+        # obs histogram — the same stream `st.latency` accumulates live
+        lat = latency_summary(svc)
+        p50, p99 = lat["p50"], lat["p99"]
         att = st.attainment
         shed_rate = st.shed / n_req
         expired_rate = st.expired / n_req

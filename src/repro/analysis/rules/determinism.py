@@ -18,6 +18,14 @@ Two protected regions:
      (latency accounting), never for decisions, and they never leave the
      metrics structs.
 
+  3. **The observability package** (`repro.obs.*`, DESIGN.md §8):
+     tracer/metrics timestamps must flow through the injectable clock
+     (`repro.obs.clock.default_clock`) so virtual-clock soaks stay
+     bit-deterministic with tracing on. Every `time.*` / `datetime.*`
+     read is banned there — including the monotonic clocks the
+     scheduler region allows — except inside `repro.obs.clock` itself,
+     the one sanctioned wall-clock boundary.
+
 jax.random / numpy.random are not flagged: the former is the sanctioned
 mechanism, the latter is the tracer-hazard rule's jurisdiction.
 """
@@ -33,6 +41,10 @@ RULE_ID = "hot-nondeterminism"
 
 # modules whose *entire* body is a deterministic replay path
 DETERMINISTIC_PATHS = ("repro.service.scheduler",)
+
+# the observability package: clock reads allowed only in the clock module
+OBS_PACKAGE = "repro.obs"
+OBS_CLOCK_MODULE = "repro.obs.clock"
 
 # observability clocks: monotonic, never used for decisions
 _ALLOWED_CLOCKS = {
@@ -124,6 +136,33 @@ class HotNondeterminismRule:
                     f"'{mod.modname}': pump/admission decisions must "
                     "replay from event logs; use time.perf_counter for "
                     "observability or thread seeds explicitly",
+                ))
+
+        for mod in project.modules:
+            in_obs = (mod.modname == OBS_PACKAGE
+                      or mod.modname.startswith(OBS_PACKAGE + "."))
+            if not in_obs or mod.modname == OBS_CLOCK_MODULE:
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = mod.qualify(node.func) or ""
+                # in_traced=True bans even the monotonic clocks: obs
+                # timestamps must come through the injectable clock
+                reason = _banned(qual, in_traced=True)
+                if reason is None:
+                    continue
+                key = (mod.path, node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(mod.finding(
+                    self.id, node,
+                    f"{reason} in observability module '{mod.modname}': "
+                    "tracer/metrics timestamps must flow through the "
+                    f"injectable clock ('{OBS_CLOCK_MODULE}."
+                    "default_clock') so virtual-clock soaks stay "
+                    "bit-deterministic with tracing on (DESIGN.md §8)",
                 ))
         return findings
 

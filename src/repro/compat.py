@@ -157,6 +157,51 @@ def mesh_model_axis(mesh) -> str | None:
 _PROGRAM_CACHE_SIZE = 32
 
 
+def _arg_signature(args: tuple, kwargs: dict) -> str:
+    """Shape/dtype signature of a program call — the axis jit's own cache
+    keys on beyond the builder's static key."""
+    parts = []
+    for leaf in jax.tree_util.tree_leaves((args, kwargs)):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is not None and dtype is not None:
+            parts.append(f"{dtype}{list(shape)}")
+        else:
+            parts.append(type(leaf).__name__)
+    return ";".join(parts)
+
+
+class _LedgerProgram:
+    """Pass-through wrapper over a built program that records each first
+    call at a novel shape signature in the compile ledger — the call that
+    pays trace + XLA compile. Same-signature calls are ledger-free."""
+
+    __slots__ = ("_program", "_name", "_key", "_seen")
+
+    def __init__(self, program: Callable, name: str, key: str):
+        self._program = program
+        self._name = name
+        self._key = key
+        self._seen: set = set()
+
+    def __call__(self, *args, **kwargs):
+        sig = _arg_signature(args, kwargs)
+        if sig in self._seen:
+            return self._program(*args, **kwargs)
+        self._seen.add(sig)
+        from repro.obs.clock import default_clock
+        from repro.obs.ledger import get_ledger
+
+        t0 = default_clock()
+        out = self._program(*args, **kwargs)
+        get_ledger().note_compile(self._name, self._key, sig,
+                                  default_clock() - t0)
+        return out
+
+    def __getattr__(self, attr):
+        return getattr(self._program, attr)
+
+
 def cached_program(builder: Callable) -> Callable:
     """LRU-cache a compiled-program builder keyed on its (hashable) args.
 
@@ -172,5 +217,22 @@ def cached_program(builder: Callable) -> Callable:
     historical mesh + compiled executable forever. LRU eviction drops the
     oldest program (and its jit wrapper) once more than
     ``_PROGRAM_CACHE_SIZE`` static configurations have been seen.
+
+    Every cache miss records a ``build`` event in the compile ledger
+    (`repro.obs.ledger`), and the returned program records a ``compile``
+    event on its first call at each novel shape signature — so a warm
+    re-run provably records nothing (DESIGN.md §8). Identity semantics
+    are unchanged: same key → the same wrapper object.
     """
-    return functools.lru_cache(maxsize=_PROGRAM_CACHE_SIZE)(builder)
+    @functools.wraps(builder)
+    def build(*key):
+        from repro.obs.clock import default_clock
+        from repro.obs.ledger import get_ledger
+
+        t0 = default_clock()
+        program = builder(*key)
+        get_ledger().note_build(builder.__name__, repr(key),
+                                default_clock() - t0)
+        return _LedgerProgram(program, builder.__name__, repr(key))
+
+    return functools.lru_cache(maxsize=_PROGRAM_CACHE_SIZE)(build)

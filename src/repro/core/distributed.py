@@ -385,11 +385,10 @@ def solve_distributed(
     falls back to the single-device `solve` unchanged. Returns the same
     `ParaQAOAOutput` as `solve`.
     """
-    import time
-
     from repro.core import paraqaoa as para_mod
     from repro.core.graph import cut_value
     from repro.core.partition import partition_for_solver
+    from repro.obs import trace as trace_mod
 
     mesh = as_mesh(mesh_spec)
     if mesh is None or not mesh.shape:
@@ -401,113 +400,138 @@ def solve_distributed(
     device_cap = cfg.n_qubits
     budget = device_cap + h
 
-    t0 = time.perf_counter()
-    # ---- stage 1: host-side partition at the lifted budget ---------------
-    part = partition or partition_for_solver(graph, budget)
-    t_part = time.perf_counter()
+    # §8: stage timings come from the ambient tracer's spans (a
+    # non-recording tracer by default; `solve_maxcut --trace-out`
+    # installs a recording one)
+    tr = trace_mod.get_tracer()
+    root = tr.begin("solve", n=graph.n, n_edges=graph.n_edges,
+                    mesh=dict(mesh.shape))
+    with tr.attach(root):
+        # ---- stage 1: host-side partition at the lifted budget -----------
+        with tr.span("partition", n_qubits=budget) as sp_part:
+            part = partition or partition_for_solver(graph, budget)
 
-    # ---- stage 2: solver pool + oversized-subproblem routing -------------
-    qcfg = cfg.qaoa_config()
-    small = [i for i, s in enumerate(part.sizes) if s <= device_cap]
-    big = [i for i, s in enumerate(part.sizes) if s > device_cap]
-    if big and not model_axis:
-        raise ValueError(
-            f"subgraphs of {max(part.sizes)} qubits exceed the "
-            f"{device_cap}-qubit device cap and the mesh has no `model` axis"
-        )
-
-    bit_indices = np.zeros((part.m, cfg.top_k), dtype=np.int64)
-    if small:
-        edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
-            [part.subgraphs[i] for i in small], device_cap
-        )
-        if data_axes:
-            res = solve_pool(edges, weights, masks, qcfg, mesh, axes=data_axes)
-        else:  # model-only mesh: the pool itself stays single-device
-            res = qaoa_mod.solve_subgraph_batch_program(qcfg)(
-                edges, weights, masks
+        # ---- stage 2: solver pool + oversized-subproblem routing ---------
+        qcfg = cfg.qaoa_config()
+        small = [i for i, s in enumerate(part.sizes) if s <= device_cap]
+        big = [i for i, s in enumerate(part.sizes) if s > device_cap]
+        if big and not model_axis:
+            tr.end(root)
+            raise ValueError(
+                f"subgraphs of {max(part.sizes)} qubits exceed the "
+                f"{device_cap}-qubit device cap and the mesh has no "
+                "`model` axis"
             )
-        bit_indices[small] = np.asarray(res.bitstrings)
-    # oversized subproblems: grouped by qubit count and run as stacked
-    # batches through one cached sharded-engine program per n (edge arrays
-    # padded with exact-no-op zero rows) — instead of one compile-shaped
-    # call per subgraph. With `sharded_opt_steps > 0` the linear-ramp
-    # initialization is Adam-ascended per subgraph *through* the sharded
-    # evolution (DESIGN.md §2.6); 0 runs the ramp as-is.
-    sharded_steps = int(getattr(cfg, "sharded_opt_steps", 0))
-    gammas0, betas0 = qaoa_mod.linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
-    by_n: dict[int, list[int]] = {}
-    for i in big:
-        by_n.setdefault(part.subgraphs[i].n, []).append(i)
-    for n_sub, idxs in sorted(by_n.items()):
-        subs = [part.subgraphs[i] for i in idxs]
-        b_edges, b_weights, _ = qaoa_mod.pad_subgraph_arrays(subs, n_sub)
-        res = sharded_qaoa_batch(
-            b_edges,
-            b_weights,
-            n_sub,
-            gammas0,
-            betas0,
-            mesh,
-            axis=model_axis,
-            top_k=cfg.top_k,
-            schedule=schedule,
-            group=qcfg.mixer_group,
-            opt_steps=sharded_steps,
-            learning_rate=cfg.learning_rate,
-        )
-        bit_indices[idxs] = (
-            np.asarray(res.bitstrings).reshape(len(idxs), -1)[:, : cfg.top_k]
-        )
-    t_solve = time.perf_counter()
 
-    # ---- stage 3: merge frontier (striped when the policy allows) --------
-    # "auto":    stripe only when the striped sweep is provably exhaustive
-    #            (no shard ever prunes) — then the cut value is identical
-    #            to the single-device merge on the same candidates;
-    # "striped": always stripe (the paper's independent DFS workers). In
-    #            the beam-pruned regime each shard prunes within its own
-    #            stripe, a *different* heuristic from one global beam —
-    #            often better, but not value-identical to `solve`;
-    # "single":  keep the merge on one device (pool/statevector only).
-    if merge_mode not in ("auto", "striped", "single"):
-        raise ValueError(f"unknown merge_mode {merge_mode!r}")
-    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
-    bw = cfg.beam_width or merge_mod.exact_beam_width(
-        cfg.top_k, part.m, cap=cfg.beam_cap
-    )
-    # merge_sharded stripes over one axis only (the innermost data axis);
-    # a `pod` axis replicates the striped sweep rather than widening it
-    n_shards = int(mesh.shape[data_axes[-1]]) if data_axes else 1
-    sl = min(cfg.merge_level if split_level is None else split_level,
-             part.m - 1)
-    per_shard = None
-    if n_shards > 1 and part.m > 1 and merge_mode != "single":
-        w_exact = merge_mod.striped_beam_width(
-            cfg.top_k, part.m, n_shards, sl, cap=cfg.beam_cap
-        )
-        if w_exact is not None and (cfg.beam_width is None or bw >= 2 * cfg.top_k**part.m):
-            per_shard = w_exact
-        elif merge_mode == "striped":
-            per_shard = max(-(-bw // n_shards), 2 * cfg.top_k)
-    if per_shard is not None:
-        assign, val = merge_sharded(
-            plan, per_shard, mesh, axis=data_axes[-1], split_level=sl
-        )
-        assignment = np.asarray(assign).reshape(-1)[: graph.n]
-        cut = float(np.asarray(val).reshape(-1)[0])
-    else:
-        merged = merge_mod.merge_scan(plan, bw)
-        assignment = np.asarray(merged.assignment)
-        cut = float(merged.cut_value)
-    t_merge = time.perf_counter()
+        bit_indices = np.zeros((part.m, cfg.top_k), dtype=np.int64)
+        with tr.span("solve_pool", m=part.m, n_small=len(small),
+                     n_big=len(big)) as sp_solve:
+            if small:
+                edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
+                    [part.subgraphs[i] for i in small], device_cap
+                )
+                if data_axes:
+                    res = solve_pool(edges, weights, masks, qcfg, mesh,
+                                     axes=data_axes)
+                else:  # model-only mesh: the pool itself stays single-device
+                    res = qaoa_mod.solve_subgraph_batch_program(qcfg)(
+                        edges, weights, masks
+                    )
+                bit_indices[small] = np.asarray(res.bitstrings)
+            # oversized subproblems: grouped by qubit count and run as
+            # stacked batches through one cached sharded-engine program per
+            # n (edge arrays padded with exact-no-op zero rows) — instead
+            # of one compile-shaped call per subgraph. With
+            # `sharded_opt_steps > 0` the linear-ramp initialization is
+            # Adam-ascended per subgraph *through* the sharded evolution
+            # (DESIGN.md §2.6); 0 runs the ramp as-is.
+            sharded_steps = int(getattr(cfg, "sharded_opt_steps", 0))
+            gammas0, betas0 = qaoa_mod.linear_ramp_init(
+                cfg.p_layers, cfg.ramp_delta
+            )
+            by_n: dict[int, list[int]] = {}
+            for i in big:
+                by_n.setdefault(part.subgraphs[i].n, []).append(i)
+            for n_sub, idxs in sorted(by_n.items()):
+                with tr.span("sharded_ascent", n_qubits=n_sub,
+                             batch=len(idxs), opt_steps=sharded_steps):
+                    subs = [part.subgraphs[i] for i in idxs]
+                    b_edges, b_weights, _ = qaoa_mod.pad_subgraph_arrays(
+                        subs, n_sub
+                    )
+                    res = sharded_qaoa_batch(
+                        b_edges,
+                        b_weights,
+                        n_sub,
+                        gammas0,
+                        betas0,
+                        mesh,
+                        axis=model_axis,
+                        top_k=cfg.top_k,
+                        schedule=schedule,
+                        group=qcfg.mixer_group,
+                        opt_steps=sharded_steps,
+                        learning_rate=cfg.learning_rate,
+                    )
+                    bit_indices[idxs] = (
+                        np.asarray(res.bitstrings)
+                        .reshape(len(idxs), -1)[:, : cfg.top_k]
+                    )
 
-    # ---- optional beyond-paper refinement --------------------------------
-    if cfg.refine_steps > 0:
-        from repro.core.baselines.local_search import refine
+        # ---- stage 3: merge frontier (striped when the policy allows) ----
+        # "auto":    stripe only when the striped sweep is provably
+        #            exhaustive (no shard ever prunes) — then the cut value
+        #            is identical to the single-device merge on the same
+        #            candidates;
+        # "striped": always stripe (the paper's independent DFS workers).
+        #            In the beam-pruned regime each shard prunes within its
+        #            own stripe, a *different* heuristic from one global
+        #            beam — often better, but not value-identical to
+        #            `solve`;
+        # "single":  keep the merge on one device (pool/statevector only).
+        if merge_mode not in ("auto", "striped", "single"):
+            tr.end(root)
+            raise ValueError(f"unknown merge_mode {merge_mode!r}")
+        with tr.span("merge", m=part.m) as sp_merge:
+            plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
+            bw = cfg.beam_width or merge_mod.exact_beam_width(
+                cfg.top_k, part.m, cap=cfg.beam_cap
+            )
+            # merge_sharded stripes over one axis only (the innermost data
+            # axis); a `pod` axis replicates the striped sweep rather than
+            # widening it
+            n_shards = int(mesh.shape[data_axes[-1]]) if data_axes else 1
+            sl = min(cfg.merge_level if split_level is None else split_level,
+                     part.m - 1)
+            per_shard = None
+            if n_shards > 1 and part.m > 1 and merge_mode != "single":
+                w_exact = merge_mod.striped_beam_width(
+                    cfg.top_k, part.m, n_shards, sl, cap=cfg.beam_cap
+                )
+                if w_exact is not None and (cfg.beam_width is None or bw >= 2 * cfg.top_k**part.m):
+                    per_shard = w_exact
+                elif merge_mode == "striped":
+                    per_shard = max(-(-bw // n_shards), 2 * cfg.top_k)
+            if per_shard is not None:
+                assign, val = merge_sharded(
+                    plan, per_shard, mesh, axis=data_axes[-1], split_level=sl
+                )
+                assignment = np.asarray(assign).reshape(-1)[: graph.n]
+                cut = float(np.asarray(val).reshape(-1)[0])
+            else:
+                merged = merge_mod.merge_scan(plan, bw)
+                assignment = np.asarray(merged.assignment)
+                cut = float(merged.cut_value)
 
-        assignment, cut = refine(part.graph, assignment, cfg.refine_steps)
-    t_end = time.perf_counter()
+        # ---- optional beyond-paper refinement ----------------------------
+        with tr.span("refine", steps=cfg.refine_steps) as sp_refine:
+            if cfg.refine_steps > 0:
+                from repro.core.baselines.local_search import refine
+
+                assignment, cut = refine(
+                    part.graph, assignment, cfg.refine_steps
+                )
+    tr.end(root)
 
     check = float(cut_value(part.graph, jnp.asarray(assignment)))
     if cfg.refine_steps == 0:
@@ -515,11 +539,11 @@ def solve_distributed(
     cut = check
 
     timings = {
-        "partition_s": t_part - t0,
-        "solve_s": t_solve - t_part,
-        "merge_s": t_merge - t_solve,
-        "refine_s": t_end - t_merge,
-        "total_s": t_end - t0,
+        "partition_s": sp_part.duration_s,
+        "solve_s": sp_solve.duration_s,
+        "merge_s": sp_merge.duration_s,
+        "refine_s": sp_refine.duration_s,
+        "total_s": root.duration_s,
     }
     from repro.core.pei import SolveReport
 

@@ -299,6 +299,11 @@ def sharded_ascent(
     whatever implementation the caller selected.
     """
 
+    if isinstance(gammas, jax.core.Tracer):
+        from repro.obs.ledger import get_ledger
+
+        get_ledger().note_op("sharded_ascent", ops.get_implementation())
+
     def neg_local(params):
         g, b = params
         re, im, in_b = evolve(layout, cut, g, b)

@@ -36,6 +36,7 @@ import numpy as np
 from repro import compat
 from repro.core.graph import Graph
 from repro.core.partition import Partition
+from repro.obs import trace as trace_mod
 
 
 class MergePlan(NamedTuple):
@@ -391,24 +392,33 @@ def merge_stream(
             is_final=(level == m - 1),
         )
 
-    yield snapshot(carry, 0)
+    # §8: one span per materialized level. Spans close *before* their
+    # snapshot is yielded — a consumer may hold the generator between
+    # yields arbitrarily long, and that wait is the caller's time, not
+    # the merge's.
+    tr = trace_mod.get_tracer()
+    with tr.span("merge_level", level=1, n_levels=m):
+        snap = snapshot(carry, 0)
+    yield snap
     if m == 1:
         return
 
     step = _stream_step_program(plan_statics(plan), beam_width)
     for l in range(1, m):
-        xs = (
-            (
-                plan.lo[l],
-                plan.cand_bits[l],
-                plan.edge_u[l],
-                plan.edge_v[l],
-                plan.edge_w[l],
-            ),
-            jnp.int32(l),
-        )
-        carry = step(carry, xs)
-        yield snapshot(carry, l)
+        with tr.span("merge_level", level=l + 1, n_levels=m):
+            xs = (
+                (
+                    plan.lo[l],
+                    plan.cand_bits[l],
+                    plan.edge_u[l],
+                    plan.edge_v[l],
+                    plan.edge_w[l],
+                ),
+                jnp.int32(l),
+            )
+            carry = step(carry, xs)
+            snap = snapshot(carry, l)
+        yield snap
 
 
 def global_winner(res: MergeResult, axis: str, shard_id):

@@ -10,7 +10,6 @@ Parameter taxonomy (paper §4.2):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -26,6 +25,7 @@ from repro.core.partition import (
     partition_for_solver,
 )
 from repro.core.pei import SolveReport
+from repro.obs import trace as trace_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,31 +104,40 @@ def solve(
     partition: Partition | None = None,
 ) -> ParaQAOAOutput:
     """Solve one Max-Cut instance end to end on the current default device."""
-    t0 = time.perf_counter()
+    # §8: stage timings come from the ambient tracer's spans — with the
+    # default (non-recording) tracer this is the same perf_counter
+    # stamping as before; `solve_maxcut --trace-out` installs a
+    # recording tracer and the same spans become the exported trace
+    tr = trace_mod.get_tracer()
+    with tr.span("solve", n=graph.n, n_edges=graph.n_edges) as root:
+        # ---- stage 1: graph partition (paper Alg. 1) ---------------------
+        with tr.span("partition", n_qubits=cfg.n_qubits) as sp_part:
+            part = partition or partition_for_solver(graph, cfg.n_qubits)
 
-    # ---- stage 1: graph partition (paper Alg. 1) -------------------------
-    part = partition or partition_for_solver(graph, cfg.n_qubits)
-    t_part = time.perf_counter()
+        # ---- stage 2: parallelized QAOA execution ------------------------
+        with tr.span("solve_pool", m=part.m,
+                     n_qubits=cfg.n_qubits) as sp_solve:
+            qcfg = cfg.qaoa_config()
+            edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
+                part.subgraphs, qcfg.n_qubits
+            )
+            result = qaoa_mod.solve_subgraph_batch_program(qcfg)(
+                edges, weights, masks
+            )
+            bit_indices = np.asarray(result.bitstrings)  # (M, K)
 
-    # ---- stage 2: parallelized QAOA execution ----------------------------
-    qcfg = cfg.qaoa_config()
-    edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
-        part.subgraphs, qcfg.n_qubits
-    )
-    result = qaoa_mod.solve_subgraph_batch_program(qcfg)(edges, weights, masks)
-    bit_indices = np.asarray(result.bitstrings)  # (M, K)
-    t_solve = time.perf_counter()
+        # ---- stage 3: level-aware parallel merge -------------------------
+        with tr.span("merge", m=part.m) as sp_merge:
+            assignment, cut, bw = merge_candidates(part, bit_indices, cfg)
 
-    # ---- stage 3: level-aware parallel merge -----------------------------
-    assignment, cut, bw = merge_candidates(part, bit_indices, cfg)
-    t_merge = time.perf_counter()
+        # ---- optional beyond-paper refinement ----------------------------
+        with tr.span("refine", steps=cfg.refine_steps) as sp_refine:
+            if cfg.refine_steps > 0:
+                from repro.core.baselines.local_search import refine
 
-    # ---- optional beyond-paper refinement --------------------------------
-    if cfg.refine_steps > 0:
-        from repro.core.baselines.local_search import refine
-
-        assignment, cut = refine(part.graph, assignment, cfg.refine_steps)
-    t_end = time.perf_counter()
+                assignment, cut = refine(
+                    part.graph, assignment, cfg.refine_steps
+                )
 
     # sanity: merge's incremental score must equal a from-scratch evaluation
     check = float(cut_value(part.graph, jnp.asarray(assignment)))
@@ -137,11 +146,11 @@ def solve(
     cut = check
 
     timings = {
-        "partition_s": t_part - t0,
-        "solve_s": t_solve - t_part,
-        "merge_s": t_merge - t_solve,
-        "refine_s": t_end - t_merge,
-        "total_s": t_end - t0,
+        "partition_s": sp_part.duration_s,
+        "solve_s": sp_solve.duration_s,
+        "merge_s": sp_merge.duration_s,
+        "refine_s": sp_refine.duration_s,
+        "total_s": root.duration_s,
     }
     report = SolveReport(
         method="paraqaoa",

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.obs.ledger import get_ledger
 
 _IMPL = "auto"
 
@@ -61,7 +62,18 @@ def _pallas(interpret_ok: bool = True):
     return dict(use=False, interpret=False)
 
 
+def _note(op: str, x) -> None:
+    """Compile-ledger op event: dispatch happens at *trace* time, so an
+    op entered with tracer-typed arguments fires exactly once per
+    (re)trace of the enclosing program — retrace storms show up as op
+    counts in the ledger (DESIGN.md §8). Concrete-argument (eager) calls
+    record nothing."""
+    if isinstance(x, jax.core.Tracer):
+        get_ledger().note_op(op, get_implementation())
+
+
 def cutvals(n: int, edges, weights):
+    _note("cutvals", edges)
     p = _pallas()
     if p["use"]:
         from repro.kernels import cutvals as k
@@ -71,6 +83,7 @@ def cutvals(n: int, edges, weights):
 
 
 def cutvals_at(idx, edges, weights):
+    _note("cutvals_at", idx)
     p = _pallas()
     if p["use"]:
         from repro.kernels import cutvals as k
@@ -80,6 +93,7 @@ def cutvals_at(idx, edges, weights):
 
 
 def apply_phase(re, im, cutv, gamma):
+    _note("apply_phase", re)
     p = _pallas()
     if p["use"]:
         from repro.kernels import phase as k
@@ -89,6 +103,7 @@ def apply_phase(re, im, cutv, gamma):
 
 
 def apply_mixer(re, im, n: int, beta, group: int = 7):
+    _note("apply_mixer", re)
     p = _pallas()
     if p["use"]:
         from repro.kernels import mixer as k
@@ -98,6 +113,7 @@ def apply_mixer(re, im, n: int, beta, group: int = 7):
 
 
 def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
+    _note("apply_mixer_bits", re)
     p = _pallas()
     if p["use"]:
         from repro.kernels import mixer as k
@@ -118,6 +134,7 @@ def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
     the remaining groups through the mixer kernel; the XLA path is the
     exact phase-then-mixer reference decomposition.
     """
+    _note("apply_layer", re)
     p = _pallas()
     if p["use"]:
         from repro.kernels import fused_layer as fl
@@ -146,6 +163,7 @@ def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
 
 
 def expectation(re, im, cutv):
+    _note("expectation", re)
     p = _pallas()
     if p["use"]:
         from repro.kernels import phase as k
@@ -155,6 +173,7 @@ def expectation(re, im, cutv):
 
 
 def cut_batch_dense(spins, adjacency, total_weight):
+    _note("cut_batch_dense", spins)
     p = _pallas()
     if p["use"]:
         from repro.kernels import cutbatch as k

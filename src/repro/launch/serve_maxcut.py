@@ -86,6 +86,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--stream", action="store_true",
                     help="anytime mode: print the best-known cut after "
                     "every merge level of every request")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="export the request-to-kernel span trace here "
+                    "(tracing is off unless this is set; DESIGN.md §8)")
+    ap.add_argument("--trace-format", choices=("jsonl", "chrome"),
+                    default="jsonl",
+                    help="trace export format: 'jsonl' (one span per "
+                    "line) or 'chrome' (Perfetto-loadable trace events)")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="export the service metrics snapshot here "
+                    "(counters, gauges, latency histograms)")
+    ap.add_argument("--metrics-format", choices=("json", "prom"),
+                    default="json",
+                    help="metrics export format: JSON snapshot or "
+                    "Prometheus text exposition")
     return ap
 
 
@@ -109,6 +123,7 @@ def run(argv=None):
                 f"--xla_force_host_platform_device_count={need}"
             )
 
+    from repro.obs.trace import Tracer
     from repro.service import SLA, ServiceConfig, SolveService
     from repro.service.workload import request_mix, tenant_mix
 
@@ -118,6 +133,9 @@ def run(argv=None):
     )
     tenants = tenant_mix(args.requests, args.tenants, args.seed)
 
+    # §8: tracing is enabled only when an export path is requested; the
+    # tracer shares the service's clock (the default here)
+    tracer = Tracer(record=True) if args.trace_out else None
     svc = SolveService(
         ServiceConfig(
             batch_slots=args.batch,
@@ -128,7 +146,8 @@ def run(argv=None):
             max_inflight=args.max_inflight,
             recalibrate=not args.no_recalibrate,
             enforce_deadlines=not args.no_enforce_sla,
-        )
+        ),
+        tracer=tracer,
     )
     sla = SLA(deadline_s=args.deadline, target_quality=args.target_quality,
               floor_quality=args.floor_quality)
@@ -164,9 +183,8 @@ def run(argv=None):
               f"cut={r.cut_value:.0f} latency={r.latency_s:.2f}s ({src})"
               f"{tail}")
 
-    lat = sorted(r.latency_s for r in svc.results.values())
-    p50 = lat[len(lat) // 2]
     st = svc.stats
+    p50 = st.latency.percentile(0.5)
     print(f"[serve_maxcut] {len(rids)} requests in {wall:.2f}s "
           f"({len(rids) / wall:.2f} req/s), p50 latency {p50:.2f}s")
     if args.deadline is not None and not args.no_enforce_sla:
@@ -179,6 +197,17 @@ def run(argv=None):
     if not args.no_recalibrate:
         print(f"[serve_maxcut] recalibration: "
               f"{svc.planner.calibration.as_dict()}")
+    if args.trace_out:
+        svc.trace.export(args.trace_out, args.trace_format)
+        print(f"[serve_maxcut] trace ({args.trace_format}, "
+              f"{len(svc.trace.spans)} spans): {args.trace_out}")
+    if args.metrics_out:
+        reg = svc.metrics_registry()
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.to_json() if args.metrics_format == "json"
+                    else reg.to_prometheus())
+        print(f"[serve_maxcut] metrics ({args.metrics_format}): "
+              f"{args.metrics_out}")
     return svc
 
 

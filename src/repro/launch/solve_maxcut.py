@@ -70,6 +70,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compare-gw", action="store_true",
                     help="also run the Goemans-Williamson baseline and "
                     "report AR / PEI against it")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="export the pipeline span trace here (tracing is "
+                    "off unless this is set; DESIGN.md §8)")
+    ap.add_argument("--trace-format", choices=("jsonl", "chrome"),
+                    default="jsonl",
+                    help="trace export format: 'jsonl' (one span per "
+                    "line) or 'chrome' (Perfetto-loadable trace events)")
     return ap
 
 
@@ -93,9 +100,12 @@ def run(argv=None):
                 f"--xla_force_host_platform_device_count={need}"
             )
 
+    import contextlib
+
     from repro.core import ParaQAOAConfig, solve, solve_distributed
     from repro.core.graph import Graph
     from repro.core.pei import pei
+    from repro.obs.trace import Tracer, use_tracer
 
     graph = Graph.erdos_renyi(args.n, args.p, seed=args.seed)
     print(f"[maxcut] G({args.n}, {args.p}): {graph.n_edges} edges")
@@ -105,19 +115,28 @@ def run(argv=None):
         refine_steps=args.refine,
         sharded_opt_steps=args.sharded_opt_steps,
     )
-    if mesh_spec is not None:
-        out = solve_distributed(
-            graph, cfg, mesh_spec,
-            schedule=args.schedule, merge_mode=args.merge_mode,
-        )
-        extra = out.report.extra
-        print(f"[maxcut] mesh {extra['mesh']}: "
-              f"{extra['merge_shards']} merge shards "
-              f"({extra['merge_mode']}), "
-              f"{extra['sharded_subproblems']} model-sharded subproblems "
-              f"(sharded_opt_steps={extra['sharded_opt_steps']})")
-    else:
-        out = solve(graph, cfg)
+    # §8: tracing is enabled only when an export path is requested; the
+    # pipeline's ambient-tracer spans become the exported trace
+    tracer = Tracer(record=True) if args.trace_out else None
+    scope = use_tracer(tracer) if tracer else contextlib.nullcontext()
+    with scope:
+        if mesh_spec is not None:
+            out = solve_distributed(
+                graph, cfg, mesh_spec,
+                schedule=args.schedule, merge_mode=args.merge_mode,
+            )
+            extra = out.report.extra
+            print(f"[maxcut] mesh {extra['mesh']}: "
+                  f"{extra['merge_shards']} merge shards "
+                  f"({extra['merge_mode']}), "
+                  f"{extra['sharded_subproblems']} model-sharded subproblems "
+                  f"(sharded_opt_steps={extra['sharded_opt_steps']})")
+        else:
+            out = solve(graph, cfg)
+    if tracer is not None:
+        tracer.export(args.trace_out, args.trace_format)
+        print(f"[maxcut] trace ({args.trace_format}, "
+              f"{len(tracer.spans)} spans): {args.trace_out}")
     print(f"[maxcut] cut = {out.cut_value:.0f}  "
           f"(M={out.partition.m}, K={args.k}, {out.report.runtime_s:.2f}s)")
     for stage, t in out.timings.items():

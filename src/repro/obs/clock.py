@@ -1,0 +1,24 @@
+"""The observability layer's single sanctioned time source (DESIGN.md §8).
+
+Every timestamp in `repro.obs` — span begin/end stamps, ledger
+durations — flows from a clock *callable* injected at construction
+time, defaulting to ``default_clock`` below. No other `repro.obs`
+module may read `time` / `datetime` directly: reprolint's
+`hot-nondeterminism` rule flags any clock read outside this module, so
+a `workload.VirtualClock` injected into a `SolveService` (and from
+there into its `Tracer`) provably reaches every stamp — which is what
+makes a traced 2,000-request soak bit-deterministic
+(tests/test_obs.py).
+
+``default_clock`` is a bare alias, not a wrapper: call sites pay one
+indirection, and identity comparisons against `time.perf_counter`
+still hold.
+"""
+
+from __future__ import annotations
+
+import time
+
+# monotonic, high-resolution, never used for decisions — the same clock
+# the scheduler defaults to (repro.service.scheduler)
+default_clock = time.perf_counter

@@ -371,6 +371,23 @@ class Planner:
             / max(work, 1),
         )
 
+    def observe_span(self, span) -> None:
+        """§8: recalibration from the span stream. The scheduler hands
+        every closed stage span here; spans carry their observation
+        payload in their attrs, and this dispatches on the span name to
+        the per-stage observers above. Unknown span names are ignored,
+        so the scheduler can stream its whole trace without filtering.
+        """
+        a = span.attrs
+        if span.name == "partition":
+            self.observe_partition(a["n"], a["n_edges"], span.duration_s)
+        elif span.name == "solve":
+            self.observe_solve(a["n_qubits"], a["p_layers"], a["opt_steps"],
+                               a["slots"], span.duration_s)
+        elif span.name == "merge":
+            self.observe_merge(a["knobs"], a["m"], a["n_edges"],
+                               span.duration_s)
+
     def _lattice(self, floor_quality: float | None) -> list[KnobTuple]:
         """The knob lattice a request may occupy: grid tuples meeting the
         declared hard accuracy floor. An unreachable floor returns [] —

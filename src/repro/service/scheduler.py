@@ -78,6 +78,9 @@ from repro.core import paraqaoa as para_mod
 from repro.core import qaoa as qaoa_mod
 from repro.core.graph import Graph, cut_value
 from repro.core.partition import partition_for_solver
+from repro.obs import trace as trace_mod
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import Span, Tracer
 from repro.service.backend import make_backend
 from repro.service.cache import ResultCache
 from repro.service.canonical import canonical_form
@@ -172,13 +175,14 @@ class _Item:
 class _Batch:
     """One dispatched (possibly still in-flight) solver batch."""
 
-    __slots__ = ("qcfg", "items", "result", "t_issue")
+    __slots__ = ("qcfg", "items", "result", "t_issue", "span")
 
-    def __init__(self, qcfg, items, result, t_issue):
+    def __init__(self, qcfg, items, result, t_issue, span=None):
         self.qcfg = qcfg
         self.items = items
         self.result = result  # unmaterialized device arrays
         self.t_issue = t_issue
+        self.span = span  # §8 dispatch span, open until harvest
 
 
 class _SLACounters:
@@ -208,6 +212,15 @@ class _SLACounters:
         return self.sla_met / d if d else 1.0
 
 
+def _counter_fields(obj) -> list[str]:
+    """The plain-count dataclass fields of a stats object — everything
+    except the latency `Histogram` and the per-tenant sub-dict."""
+    return [
+        f.name for f in dataclasses.fields(obj)
+        if f.name not in ("latency", "tenants")
+    ]
+
+
 @dataclasses.dataclass
 class TenantStats(_SLACounters):
     submitted: int = 0
@@ -219,11 +232,29 @@ class TenantStats(_SLACounters):
     downgraded: int = 0  # completed after >= 1 deadline re-plan
     sla_met: int = 0  # completed within the deadline
     sla_missed: int = 0  # completed, but late
+    # §8: completed-request latency distribution (exact p50/p99) — lives
+    # in the stats object itself so benches and exports stop
+    # reconstructing it from the results dict
+    latency: Histogram = dataclasses.field(default_factory=Histogram)
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
+        d = {f: getattr(self, f) for f in _counter_fields(self)}
+        d["latency"] = self.latency.summary()
         d["attainment"] = round(self.attainment, 4)
         return d
+
+    # §8: checkpoint-style round-trip — the histogram's raw samples
+    # travel with the counters, so restored stats keep exact percentiles
+    def snapshot(self) -> dict:
+        d = {f: getattr(self, f) for f in _counter_fields(self)}
+        d["latency"] = self.latency.snapshot()
+        return d
+
+    @classmethod
+    def restore(cls, state: dict) -> "TenantStats":
+        ts = cls(**{f: state[f] for f in state if f != "latency"})
+        ts.latency = Histogram.restore(state["latency"])
+        return ts
 
 
 @dataclasses.dataclass
@@ -242,6 +273,7 @@ class ServiceStats(_SLACounters):
     downgrade_events: int = 0  # individual deadline re-plans applied
     sla_met: int = 0
     sla_missed: int = 0
+    latency: Histogram = dataclasses.field(default_factory=Histogram)
     tenants: dict = dataclasses.field(default_factory=dict)
 
     def tenant(self, name: str) -> TenantStats:
@@ -270,9 +302,27 @@ class ServiceStats(_SLACounters):
             "downgrade_events": self.downgrade_events,
             "sla_met": self.sla_met,
             "sla_missed": self.sla_missed,
+            "latency": self.latency.summary(),
             "attainment": round(self.attainment, 4),
             "tenants": {t: s.as_dict() for t, s in self.tenants.items()},
         }
+
+    def snapshot(self) -> dict:
+        d = {f: getattr(self, f) for f in _counter_fields(self)}
+        d["latency"] = self.latency.snapshot()
+        d["tenants"] = {t: s.snapshot() for t, s in self.tenants.items()}
+        return d
+
+    @classmethod
+    def restore(cls, state: dict) -> "ServiceStats":
+        s = cls(**{
+            f: state[f] for f in state if f not in ("latency", "tenants")
+        })
+        s.latency = Histogram.restore(state["latency"])
+        s.tenants = {
+            t: TenantStats.restore(ts) for t, ts in state["tenants"].items()
+        }
+        return s
 
 
 class SolveService:
@@ -285,6 +335,7 @@ class SolveService:
         cache: ResultCache | None = None,
         backend=None,
         clock: Callable[[], float] | None = None,
+        tracer: Tracer | None = None,
     ):
         self.config = config
         # §6.6: the single time source every deadline decision and every
@@ -292,6 +343,16 @@ class SolveService:
         # `workload.VirtualClock` makes a whole soak bit-deterministic;
         # the default is the same monotonic clock as before
         self._clock = clock if clock is not None else time.perf_counter
+        # §8: the span tracer every lifecycle/stage stamp goes through.
+        # The default records nothing (tracing off); a driver passing its
+        # own `Tracer(record=True)` must construct it over this same
+        # clock or span nesting/determinism guarantees break
+        self.trace = tracer if tracer is not None else Tracer(
+            clock=self._clock
+        )
+        # open per-request root spans: rid → Span, ended exactly once at
+        # the request's terminal state (completed / shed / expired)
+        self._req_spans: dict[int, Span] = {}
         self.planner = planner or Planner(
             max_qubits=config.max_qubits, batch_slots=config.batch_slots
         )
@@ -342,6 +403,12 @@ class SolveService:
         rid = self._next_id
         self._next_id += 1
         self.stats.tenant(tenant).submitted += 1
+        # §8: the request's root span opens at submission and closes at
+        # its terminal state — parentless even when submitted from
+        # inside another request's streaming callback
+        self._req_spans[rid] = self.trace.begin(
+            "request", parent=trace_mod.ROOT, rid=rid, tenant=tenant
+        )
         self._admission.append(
             (rid, graph, sla, stream, on_update, tenant, self._clock())
         )
@@ -369,22 +436,33 @@ class SolveService:
             eff_sla = sla if budget is None else dataclasses.replace(
                 sla, deadline_s=max(budget, 0.0)
             )
-            plan = self.planner.plan(graph.n, graph.n_edges, eff_sla)
-            form = None
-            if self.config.enable_cache:
-                form = canonical_form(graph)
-                hit = self.cache.lookup(
-                    graph, form=form, min_quality=plan.quality
+            # §8: the admission span covers plan + cache lookup and is
+            # closed *before* any terminal verdict is recorded, so a
+            # cache-hit/shed root span never ends inside a still-open
+            # child
+            root = self._req_spans.get(rid)
+            adm = self.trace.begin("admission", parent=root)
+            with self.trace.attach(adm):
+                with self.trace.span("plan"):
+                    plan = self.planner.plan(graph.n, graph.n_edges, eff_sla)
+                form = None
+                hit = None
+                if self.config.enable_cache:
+                    form = canonical_form(graph)
+                    with self.trace.span("cache_lookup"):
+                        hit = self.cache.lookup(
+                            graph, form=form, min_quality=plan.quality
+                        )
+            self.trace.end(adm, cache_hit=hit is not None)
+            if hit is not None:
+                assignment, cut = hit
+                self._record_cached(
+                    rid, graph, plan, assignment, cut, t0,
+                    stream=stream, on_update=on_update, tenant=tenant,
+                    deadline_t=None if sla.deadline_s is None
+                    else t0 + sla.deadline_s,
                 )
-                if hit is not None:
-                    assignment, cut = hit
-                    self._record_cached(
-                        rid, graph, plan, assignment, cut, t0,
-                        stream=stream, on_update=on_update, tenant=tenant,
-                        deadline_t=None if sla.deadline_s is None
-                        else t0 + sla.deadline_s,
-                    )
-                    continue
+                continue
             # shed verdict before any work is enqueued (but after the
             # cache: a hit completes instantly, predicted-late or not)
             if self._shed_if_floor_late(rid, graph, sla, plan, budget, t0,
@@ -432,13 +510,13 @@ class SolveService:
         deadline_t = None if sla.deadline_s is None else t0 + sla.deadline_s
         req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form,
                        tenant, t0, deadline_t)
-        t_part0 = self._clock()
+        ps = self.trace.begin(
+            "partition", parent=self._req_spans.get(rid),
+            n=graph.n, n_edges=graph.n_edges, n_qubits=kn.n_qubits,
+        )
         req.part = partition_for_solver(graph, kn.n_qubits)
-        if self.config.recalibrate:
-            observe = getattr(self.planner, "observe_partition", None)
-            if observe is not None:
-                observe(graph.n, graph.n_edges,
-                        self._clock() - t_part0)
+        self.trace.end(ps, m=req.part.m)
+        self._observe(ps)
         req.bit_indices = np.zeros((req.part.m, kn.top_k), dtype=np.int64)
         req.remaining = req.part.m
         req.admit_dispatch = self.stats.dispatches
@@ -480,6 +558,9 @@ class SolveService:
         ts.completed += 1
         ts.cache_served += 1
         self._count_deadline(met, ts)
+        self.stats.latency.observe(now - t0)
+        ts.latency.observe(now - t0)
+        self._end_request_span(rid, "completed", cached=True)
 
     def _count_deadline(self, met: bool | None, ts: TenantStats) -> None:
         if met is None:
@@ -515,6 +596,41 @@ class SolveService:
         ts = self.stats.tenant(tenant)
         setattr(self.stats, status, getattr(self.stats, status) + 1)
         setattr(ts, status, getattr(ts, status) + 1)
+        self._end_request_span(rid, status)
+
+    def _end_request_span(self, rid: int, status: str, **attrs) -> None:
+        """§8: close the request's root span at its terminal state — the
+        pop guarantees exactly one terminal span per submitted request
+        (the reconciliation invariant in tests/test_obs.py)."""
+        root = self._req_spans.pop(rid, None)
+        if root is not None:
+            self.trace.end(root, status=status, **attrs)
+
+    def _observe(self, span: Span) -> None:
+        """§6.5 recalibration via the §8 span stream: stage spans carry
+        their observation payload in their attrs, and the planner's
+        `observe_span` dispatches on the span name. Duck-typed planners
+        without `observe_span` fall back to the legacy per-stage hooks."""
+        if not self.config.recalibrate:
+            return
+        observe = getattr(self.planner, "observe_span", None)
+        if observe is not None:
+            observe(span)
+            return
+        a = span.attrs
+        if span.name == "partition":
+            fn = getattr(self.planner, "observe_partition", None)
+            if fn is not None:
+                fn(a["n"], a["n_edges"], span.duration_s)
+        elif span.name == "solve":
+            fn = getattr(self.planner, "observe_solve", None)
+            if fn is not None:
+                fn(a["n_qubits"], a["p_layers"], a["opt_steps"], a["slots"],
+                   span.duration_s)
+        elif span.name == "merge":
+            fn = getattr(self.planner, "observe_merge", None)
+            if fn is not None:
+                fn(a["knobs"], a["m"], a["n_edges"], span.duration_s)
 
     # --------------------------------------------------------- dispatch --
     def _pick_bucket(self):
@@ -601,8 +717,17 @@ class SolveService:
             e_pad=edge_capacity(qcfg.n_qubits),
             n_rows=slots,
         )
+        # §8: one dispatch span per issued batch, open until its harvest
+        # (requests it carries are listed in attrs — batches cross
+        # request and tenant boundaries, so the span cannot nest under
+        # any single request root)
+        ds = self.trace.begin(
+            "dispatch", parent=trace_mod.ROOT,
+            n_qubits=qcfg.n_qubits, slots=slots, filled=len(items),
+            rids=sorted({it.req.id for it in items}),
+        )
         res = self.backend.solve_batch(qcfg, edges, weights, masks)
-        self._inflight.append(_Batch(qcfg, items, res, self._clock()))
+        self._inflight.append(_Batch(qcfg, items, res, self._clock(), ds))
         for it in items:
             it.req.started = True  # §6.6: committed — no more re-plans
 
@@ -622,19 +747,20 @@ class SolveService:
         batch = self._inflight.popleft()
         bitstrings = np.asarray(batch.result.bitstrings)  # blocks here
         t_land = self._clock()
-        if self.config.recalibrate:
-            observe = getattr(self.planner, "observe_solve", None)
-            if observe is not None:
-                # the device runs batches serially, so this batch's compute
-                # window starts when the previous harvest ended — not at
-                # issue time, which would bill it for the whole in-flight
-                # queue ahead of it and inflate c_solve ~max_inflight-fold
-                t_start = max(batch.t_issue, self._last_harvest_t)
-                observe(
-                    batch.qcfg.n_qubits, batch.qcfg.p_layers,
-                    batch.qcfg.opt_steps, self.config.batch_slots,
-                    t_land - t_start,
-                )
+        # §8: the solve span is retroactive — the device runs batches
+        # serially, so this batch's compute window starts when the
+        # previous harvest ended, not at issue time, which would bill it
+        # for the whole in-flight queue ahead of it and inflate c_solve
+        # ~max_inflight-fold
+        t_start = max(batch.t_issue, self._last_harvest_t)
+        solve_span = self.trace.span_at(
+            "solve", t_start, t_land, parent=batch.span,
+            n_qubits=batch.qcfg.n_qubits, p_layers=batch.qcfg.p_layers,
+            opt_steps=batch.qcfg.opt_steps, slots=self.config.batch_slots,
+        )
+        self._observe(solve_span)
+        if batch.span is not None:
+            self.trace.end(batch.span)
         self._last_harvest_t = t_land
 
         done_requests = []
@@ -719,6 +845,14 @@ class SolveService:
         req.remaining = req.part.m
         req.downgrades += 1
         self.stats.downgrade_events += 1
+        # §8: a replan is an instant event — a zero-width span marks it
+        # in the request's tree with the knobs it moved to
+        t = self._clock()
+        self.trace.span_at(
+            "replan", t, t, parent=self._req_spans.get(req.id),
+            verdict="downgrade", n_qubits=plan.knobs.n_qubits,
+            m=req.part.m,
+        )
         # new twins must not coalesce onto a primary that now plans
         # cheaper than they require
         if req.form is not None:
@@ -782,27 +916,59 @@ class SolveService:
             pass
         return self.results
 
+    # ----------------------------------------------------------- metrics --
+    def metrics_registry(self) -> MetricsRegistry:
+        """§8: the service's stats as a `MetricsRegistry` — counters and
+        gauges copied at call time, latency histograms attached live —
+        for JSON / Prometheus export (`serve_maxcut --metrics-out`)."""
+        reg = MetricsRegistry()
+        s = self.stats
+        for f in _counter_fields(s):
+            reg.counter(f"service.{f}").inc(getattr(s, f))
+        reg.gauge("service.fill_ratio").set(s.fill_ratio)
+        reg.gauge("service.attainment").set(s.attainment)
+        reg.gauge("service.inflight").set(len(self._inflight))
+        reg.attach_histogram("service.latency", s.latency)
+        for t, ts in s.tenants.items():
+            for f in ("submitted", "completed", "shed", "expired",
+                      "sla_met", "sla_missed"):
+                reg.counter(f"tenant.{t}.{f}").inc(getattr(ts, f))
+            reg.attach_histogram(f"tenant.{t}.latency", ts.latency)
+        return reg
+
     # ------------------------------------------------------------- merge --
     def _merge(self, req: _Request) -> None:
         anytime: list = []
-        if req.stream and req.part.m >= self.config.anytime_min_levels:
-            plan, bw = para_mod.merge_inputs(
-                req.part, req.bit_indices, req.cfg
-            )
-            best_cut, best_assign = -np.inf, None
-            for snap in merge_mod.merge_stream(plan, bw):
-                if snap.cut_value > best_cut:
-                    best_cut, best_assign = snap.cut_value, snap.assignment
-                anytime.append((snap.level, snap.n_levels, best_cut))
-                if req.on_update is not None:
-                    req.on_update(req.id, snap.level, snap.n_levels, best_cut)
-            assignment = best_assign
-        else:
-            assignment, _, _ = para_mod.merge_candidates(
-                req.part, req.bit_indices, req.cfg
-            )
-        # final re-score from scratch, exactly as core.solve reconciles
-        cut = float(cut_value(req.graph, jnp.asarray(assignment)))
+        # §8: the merge span carries the observe_merge payload in its
+        # attrs; installing the service tracer globally + attaching the
+        # span parents `core.merge.merge_stream`'s per-level spans under
+        # it without threading tracer arguments through the core API
+        ms = self.trace.begin(
+            "merge", parent=self._req_spans.get(req.id),
+            knobs=req.plan.knobs, m=req.part.m, n_edges=req.graph.n_edges,
+        )
+        with trace_mod.use_tracer(self.trace), self.trace.attach(ms):
+            if req.stream and req.part.m >= self.config.anytime_min_levels:
+                plan, bw = para_mod.merge_inputs(
+                    req.part, req.bit_indices, req.cfg
+                )
+                best_cut, best_assign = -np.inf, None
+                for snap in merge_mod.merge_stream(plan, bw):
+                    if snap.cut_value > best_cut:
+                        best_cut, best_assign = snap.cut_value, snap.assignment
+                    anytime.append((snap.level, snap.n_levels, best_cut))
+                    if req.on_update is not None:
+                        req.on_update(req.id, snap.level, snap.n_levels,
+                                      best_cut)
+                assignment = best_assign
+            else:
+                assignment, _, _ = para_mod.merge_candidates(
+                    req.part, req.bit_indices, req.cfg
+                )
+            # final re-score from scratch, exactly as core.solve reconciles
+            cut = float(cut_value(req.graph, jnp.asarray(assignment)))
+        self.trace.end(ms)
+        self._observe(ms)
         if req.stream and not anytime:
             # single-level merges skip the stream; still honor the anytime
             # contract with one final update
@@ -811,11 +977,6 @@ class SolveService:
                 req.on_update(req.id, 1, 1, cut)
 
         now = self._clock()
-        if self.config.recalibrate:
-            observe = getattr(self.planner, "observe_merge", None)
-            if observe is not None:
-                observe(req.plan.knobs, req.part.m, req.graph.n_edges,
-                        now - req.solve_done_t)
         if self.config.enable_cache:
             self.cache.store(
                 req.graph,
@@ -847,9 +1008,12 @@ class SolveService:
         ts = self.stats.tenant(req.tenant)
         ts.completed += 1
         self._count_deadline(met, ts)
+        self.stats.latency.observe(now - req.submit_t)
+        ts.latency.observe(now - req.submit_t)
         if req.downgrades:
             self.stats.downgraded += 1
             ts.downgraded += 1
+        self._end_request_span(req.id, "completed", cached=False)
         del self._active[req.id]
 
         # serve coalesced isomorphic followers from the just-stored entry

@@ -226,3 +226,11 @@ def run_soak_wall(svc, trace, *, max_idle_sleep_s: float = 0.002):
             if gap > 0:
                 time.sleep(min(gap, max_idle_sleep_s))
     return rids, time.perf_counter() - t0
+
+
+def latency_summary(svc) -> dict:
+    """Completed-request latency summary for a drained soak, straight
+    from the service's shared obs histogram (count/sum/p50/p99) — the
+    single percentile implementation the benches consume (DESIGN.md §8)
+    instead of hand-rolling sorted-list math per call site."""
+    return svc.stats.latency.summary()

@@ -14,6 +14,7 @@ RESULTS = Path(__file__).resolve().parent.parent / "results"
 EXPECTED_FILES = {
     "BENCH_schedules.json",
     "BENCH_distributed.json",
+    "BENCH_obs.json",
     "BENCH_service.json",
     "BENCH_service_mesh.json",
     "BENCH_service_sla.json",
@@ -146,6 +147,32 @@ def test_service_sla_rows_carry_attainment_claims():
             f"{row['name']}: attainment {row['attainment']} below "
             f"threshold {row['attainment_threshold']} at the calibrated load"
         )
+
+
+def test_obs_rows_carry_overhead_and_ledger_claims():
+    """The §8 suite (§Perf C10) must commit the tracing-overhead claim —
+    a traced virtual soak within `overhead_bound` (5%) of the untraced
+    one — and the compile-ledger cold/warm contract: the cold soak bills
+    at least one program build, the warm re-run records zero."""
+    path = RESULTS / "BENCH_obs.json"
+    payload = json.loads(path.read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    for name in ("obs/soak_off", "obs/soak_on", "obs/overhead",
+                 "obs/compile_ledger"):
+        assert name in rows, f"missing {name}"
+    assert rows["obs/soak_on"]["spans"] > 0
+    ov = rows["obs/overhead"]
+    for key in ("overhead_ratio", "overhead_bound", "within_bound"):
+        assert key in ov, f"obs/overhead: missing {key}"
+    assert ov["overhead_bound"] <= 1.05
+    assert ov["within_bound"] is True, (
+        f"tracing overhead {ov['overhead_ratio']} exceeds the committed "
+        f"bound {ov['overhead_bound']}"
+    )
+    led = rows["obs/compile_ledger"]
+    assert led["cold_builds"] >= 1, "cold soak billed no program builds"
+    assert led["warm_builds"] == 0 and led["warm_compiles"] == 0
+    assert led["warm_zero"] is True
 
 
 def test_service_mesh_rows_carry_parity_and_async_claims():

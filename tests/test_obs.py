@@ -1,0 +1,472 @@
+"""Observability layer tests (DESIGN.md §8): span tracer, metrics
+registry, compile ledger, and the service-level trace invariants.
+
+The trace invariants mirror the §6.6 soak scaffolding from
+tests/test_service_sla.py: seeded open-loop arrival traces replay under
+an injected `VirtualClock`, with a recording `Tracer` sharing the same
+clock. The contract under test:
+
+  - spans nest: every child interval is contained in its parent's;
+  - every submitted request yields exactly one terminal "request" span
+    whose `status` attr matches its `RequestResult.status`;
+  - tracing is observation-only: a virtual-clock soak with tracing on is
+    bit-deterministic (two identical runs → byte-identical JSONL), and
+    statuses/cuts match an untraced run of the same trace;
+  - the compile ledger records every program build / per-shape compile
+    once, and a warm re-run after `reset()` records zero.
+"""
+
+import json
+
+import pytest
+
+from repro.obs import (
+    CompileLedger,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    get_ledger,
+    percentile,
+    use_tracer,
+)
+from repro.obs import trace as trace_mod
+from repro.obs.validate import (
+    validate_metrics,
+    validate_trace_jsonl,
+    validate_trace_records,
+)
+from repro.service import (
+    SLA,
+    CostModel,
+    KnobTuple,
+    Planner,
+    ServiceConfig,
+    SolveService,
+    VirtualClock,
+    arrival_trace,
+    run_soak_virtual,
+)
+from repro.service.scheduler import ServiceStats, TenantStats
+
+
+# ------------------------------------------------------------------ tracer --
+class FakeClock:
+    """Deterministic test clock: each read advances by `step`."""
+
+    def __init__(self, start=0.0, step=1.0):
+        self.t = start
+        self.step = step
+
+    def __call__(self):
+        t = self.t
+        self.t += self.step
+        return t
+
+
+def test_tracer_nesting_ids_and_parents():
+    tr = Tracer(clock=FakeClock(), record=True)
+    with tr.span("outer") as outer:
+        with tr.span("inner", k=1) as inner:
+            pass
+    assert (outer.span_id, inner.span_id) == (1, 2)
+    assert outer.parent_id is None
+    assert inner.parent_id == outer.span_id
+    assert inner.attrs == {"k": 1}
+    # containment: child interval inside parent interval
+    assert outer.t0 <= inner.t0 <= inner.t1 <= outer.t1
+    assert validate_trace_records([s.as_dict() for s in tr.spans]) == []
+
+
+def test_tracer_root_sentinel_escapes_ambient_stack():
+    tr = Tracer(clock=FakeClock(), record=True)
+    with tr.span("ambient"):
+        root = tr.begin("request", parent=trace_mod.ROOT)
+        tr.end(root)
+    assert root.parent_id is None
+
+
+def test_tracer_end_is_exactly_once_and_duration_guards():
+    tr = Tracer(clock=FakeClock(), record=True)
+    s = tr.begin("x")
+    with pytest.raises(ValueError):
+        s.duration_s  # noqa: B018 — still open
+    tr.end(s)
+    assert s.duration_s == 1.0
+    with pytest.raises(ValueError):
+        tr.end(s)
+
+
+def test_tracer_record_off_keeps_timing_but_no_spans():
+    tr = Tracer(clock=FakeClock())  # record=False is the default
+    with tr.span("stage") as s:
+        pass
+    assert s.duration_s == 1.0  # timings still usable by callers
+    assert tr.spans == []  # nothing retained
+
+
+def test_tracer_span_at_is_retroactive():
+    tr = Tracer(clock=FakeClock(), record=True)
+    s = tr.span_at("solve", 5.0, 9.0, n_qubits=6)
+    assert (s.t0, s.t1, s.duration_s) == (5.0, 9.0, 4.0)
+    assert s.attrs["n_qubits"] == 6
+
+
+def test_tracer_attach_reenters_open_span():
+    tr = Tracer(clock=FakeClock(), record=True)
+    ms = tr.begin("merge")
+    with tr.attach(ms):
+        with tr.span("merge_level", level=1) as lv:
+            pass
+    tr.end(ms)
+    assert lv.parent_id == ms.span_id
+    assert validate_trace_records([s.as_dict() for s in tr.spans]) == []
+
+
+def test_tracer_jsonl_roundtrip_and_chrome_export(tmp_path):
+    tr = Tracer(clock=FakeClock(), record=True)
+    with tr.span("solve", n=10):
+        with tr.span("partition"):
+            pass
+    text = tr.to_jsonl()
+    assert validate_trace_jsonl(text) == []
+    # byte-stable: same spans → same serialization
+    assert text == tr.to_jsonl()
+
+    p = tmp_path / "t.jsonl"
+    tr.export(str(p), "jsonl")
+    assert p.read_text().rstrip("\n") == text.rstrip("\n")
+
+    c = tmp_path / "t.json"
+    tr.export(str(c), "chrome")
+    doc = json.loads(c.read_text())
+    evs = doc["traceEvents"]
+    assert len(evs) == 2
+    assert all(e["ph"] == "X" for e in evs)
+    assert evs[0]["name"] == "solve" and evs[0]["args"]["n"] == 10
+
+
+def test_use_tracer_swaps_the_ambient_tracer():
+    tr = Tracer(clock=FakeClock(), record=True)
+    before = trace_mod.get_tracer()
+    with use_tracer(tr):
+        assert trace_mod.get_tracer() is tr
+        with trace_mod.get_tracer().span("stage"):
+            pass
+    assert trace_mod.get_tracer() is before
+    assert [s.name for s in tr.spans] == ["stage"]
+
+
+# ----------------------------------------------------------------- metrics --
+def test_percentile_is_exact_nearest_rank():
+    xs = [0.1, 0.2, 0.3, 0.4, 0.5]
+    assert percentile(xs, 0.5) == 0.3
+    assert percentile(xs, 0.99) == 0.5
+    assert percentile(xs, 0.0) == 0.1
+    assert percentile([7.0], 0.5) == 7.0
+    assert percentile([], 0.5) == 0.0
+    with pytest.raises(ValueError):
+        percentile(xs, 1.5)
+
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge()
+    g.set(2.5)
+    assert g.value == 2.5
+
+
+def test_histogram_summary_and_snapshot_roundtrip():
+    h = Histogram()
+    for v in (0.002, 0.002, 0.3, 1.5, 45.0, 120.0):  # last exceeds 60s
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 6
+    assert s["p50"] == 0.3
+    assert s["p99"] == 120.0
+    # bucket counts are cumulative and end at the +inf catch-all
+    cum = h.cumulative_counts()
+    assert cum[-1] == 6
+
+    h2 = Histogram.restore(h.snapshot())
+    assert h2 == h
+    assert h2.summary() == s
+    # snapshots survive JSON (the "+inf" boundary must be encodable)
+    h3 = Histogram.restore(json.loads(json.dumps(h.snapshot())))
+    assert h3 == h
+
+
+def test_registry_snapshot_json_and_prometheus():
+    reg = MetricsRegistry()
+    reg.counter("service.completed").inc(3)
+    reg.gauge("service.fill_ratio").set(0.75)
+    reg.histogram("service.latency").observe(0.2)
+    snap = reg.snapshot()
+    assert validate_metrics(snap) == []
+    assert snap["counters"]["service.completed"] == 3
+    assert json.loads(reg.to_json()) == snap
+
+    prom = reg.to_prometheus()
+    assert "# TYPE service_completed counter" in prom
+    assert "service_completed 3" in prom
+    assert "# TYPE service_latency histogram" in prom
+    assert 'service_latency_bucket{le="+Inf"} 1' in prom
+    assert "service_latency_count 1" in prom
+
+
+def test_registry_attach_histogram_is_a_live_view():
+    reg = MetricsRegistry()
+    h = Histogram()
+    reg.attach_histogram("service.latency", h)
+    h.observe(0.5)  # observed through the owner, after attaching
+    assert reg.snapshot()["histograms"]["service.latency"]["count"] == 1
+
+
+# ------------------------------------------------- stats histogram roundtrip --
+def test_tenant_and_service_stats_latency_survive_snapshot_restore():
+    st = ServiceStats()
+    st.completed = 2
+    st.latency.observe(0.25)
+    st.latency.observe(0.75)
+    ten = st.tenants["acme"] = TenantStats()
+    ten.submitted = 2
+    ten.latency.observe(0.25)
+
+    st2 = ServiceStats.restore(st.snapshot())
+    assert st2.completed == 2
+    assert st2.latency == st.latency
+    assert st2.as_dict() == st.as_dict()
+    assert st2.tenants["acme"].latency == ten.latency
+    # round-trips through JSON too (what a snapshot file would hold)
+    st3 = ServiceStats.restore(json.loads(json.dumps(st.snapshot())))
+    assert st3.as_dict() == st.as_dict()
+
+
+# ----------------------------------------------- recalibration via the spans --
+def test_observe_span_matches_direct_observe_calls():
+    kn = KnobTuple(n_qubits=6, top_k=2, opt_steps=12, beam_width=16)
+    mk = lambda: Planner(cost_model=CostModel(batch_slots=4), batch_slots=4)
+    via_span, direct = mk(), mk()
+
+    tr = Tracer(clock=FakeClock(), record=True)
+    via_span.observe_span(tr.span_at("partition", 0.0, 0.5, n=40, n_edges=90))
+    via_span.observe_span(tr.span_at(
+        "solve", 0.0, 0.8, n_qubits=6, p_layers=3, opt_steps=12, slots=4))
+    via_span.observe_span(tr.span_at(
+        "merge", 0.0, 0.2, knobs=kn, m=5, n_edges=90))
+    via_span.observe_span(tr.span_at("request", 0.0, 1.0))  # ignored
+
+    direct.observe_partition(40, 90, 0.5)
+    direct.observe_solve(6, 3, 12, 4, 0.8)
+    direct.observe_merge(kn, 5, 90, 0.2)
+
+    assert via_span.calibration.as_dict() == direct.calibration.as_dict()
+    assert via_span.cost_model == direct.cost_model
+
+
+# ---------------------------------------------------------- compile ledger --
+def test_compile_ledger_records_and_resets():
+    led = CompileLedger()
+    led.note_build("solve_pool_program", "(6, 3)", 0.12)
+    led.note_compile("solve_pool_program", "(6, 3)", "f32[4,16,2]", 0.8)
+    led.note_op("cutvals", "xla")
+    led.note_op("cutvals", "xla")
+    assert led.count("build") == 1
+    assert led.count("compile") == 1
+    assert led.total_compile_s() == pytest.approx(0.8)
+    snap = led.snapshot()
+    assert snap["builds"] == 1 and snap["compiles"] == 1
+    assert snap["op_traces"]["cutvals[xla]"] == 2
+    led.reset()
+    assert led.snapshot()["builds"] == 0
+    assert led.snapshot()["op_traces"] == {}
+
+
+def test_cached_programs_ledger_cold_then_warm_zero():
+    from repro import compat
+
+    calls = []
+
+    @compat.cached_program
+    def toy_program(scale):
+        calls.append(scale)
+
+        def run(x):
+            return x * scale
+
+        return run
+
+    led = get_ledger()
+    led.reset()
+    f = toy_program(3)
+    assert f is toy_program(3)  # identity through the cache
+    assert f(2.0) == 6.0
+    cold = led.snapshot()
+    assert cold["builds"] == 1
+    assert calls == [3]
+
+    # warm re-run: cache intact, ledger cleared → zero build events
+    led.reset()
+    g = toy_program(3)
+    assert g is f
+    assert g(2.0) == 6.0
+    warm = led.snapshot()
+    assert warm["builds"] == 0
+    assert warm["compiles"] == 0
+
+
+def test_kernel_ops_record_trace_events():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    led = get_ledger()
+    led.reset()
+
+    @jax.jit
+    def f(edges, weights):
+        return ops.cutvals(2, edges, weights)
+
+    edges = jnp.asarray([[0, 1]], dtype=jnp.int32)
+    weights = jnp.ones((1,), dtype=jnp.float32)
+    f(edges, weights)
+    snap = led.snapshot()
+    assert any(k.startswith("cutvals[") for k in snap["op_traces"])
+    # cached call: no re-trace, no new events
+    led.reset()
+    f(edges, weights)
+    assert led.snapshot()["op_traces"] == {}
+
+
+# ------------------------------------------------- service trace invariants --
+SOAK_GRID = tuple(
+    KnobTuple(n_qubits=6, top_k=k, opt_steps=t, beam_width=w)
+    for k in (1, 2)
+    for t in (4, 12, 30)
+    for w in (16, 64)
+)
+FLOOR_Q = 7.0
+
+
+def _soak_cost_model(batch_slots):
+    return CostModel(c_solve=3e-5, c_dispatch=2e-2, c_merge=5e-8,
+                     c_merge_base=1e-3, batch_slots=batch_slots)
+
+
+def _traced_service(slots=4, inflight=1, record=True):
+    clock = VirtualClock()
+    planner = Planner(cost_model=_soak_cost_model(slots), grid=SOAK_GRID,
+                      batch_slots=slots)
+    tracer = Tracer(clock=clock, record=record)
+    svc = SolveService(
+        ServiceConfig(batch_slots=slots, max_qubits=6, max_inflight=inflight),
+        planner=planner,
+        clock=clock,
+        tracer=tracer,
+    )
+    return svc, clock
+
+
+def _soak(requests=60, rate_rps=150.0, seed=42, slots=4, inflight=1,
+          record=True):
+    svc, clock = _traced_service(slots=slots, inflight=inflight,
+                                 record=record)
+    trace = arrival_trace(
+        requests, rate_rps=rate_rps, n_range=(4, 6), p=0.5, seed=seed,
+        repeat_frac=0.5, tenants=3, deadline_choices=(1.0, 4.0),
+        floor_choices=(None, FLOOR_Q),
+    )
+    rids = run_soak_virtual(svc, clock, trace, tick_s=0.02)
+    assert len(rids) == len(trace)
+    return svc, rids
+
+
+def _request_spans(svc):
+    return [s for s in svc.trace.spans if s.name == "request"]
+
+
+def test_soak_trace_is_schema_valid_and_nests():
+    svc, _rids = _soak()
+    recs = [s.as_dict() for s in svc.trace.spans]
+    assert recs, "recording soak produced no spans"
+    assert validate_trace_records(recs) == []
+    assert validate_trace_jsonl(svc.trace.to_jsonl()) == []
+
+
+def test_every_request_has_one_terminal_span_matching_result():
+    svc, rids = _soak()
+    spans = _request_spans(svc)
+    assert len(spans) == len(rids)
+    by_rid = {s.attrs["rid"]: s for s in spans}
+    assert set(by_rid) == set(rids)
+    for rid in rids:
+        res = svc.results[rid]
+        s = by_rid[rid]
+        assert s.attrs["status"] == res.status
+        assert s.attrs["tenant"] == res.tenant
+        assert s.t1 is not None  # terminal span is closed
+
+
+def test_traced_virtual_soak_is_bit_deterministic():
+    a, rids_a = _soak()
+    b, rids_b = _soak()
+    assert rids_a == rids_b
+    assert a.trace.to_jsonl() == b.trace.to_jsonl()
+    assert a.stats.as_dict() == b.stats.as_dict()
+
+
+def test_tracing_is_observation_only():
+    """Recording spans must not perturb a single verdict, cut, or stamp."""
+    on, rids_on = _soak(record=True)
+    off, rids_off = _soak(record=False)
+    assert rids_on == rids_off
+    assert off.trace.spans == []
+    assert on.stats.as_dict() == off.stats.as_dict()
+    for rid in rids_on:
+        ra, rb = on.results[rid], off.results[rid]
+        assert (ra.status, ra.latency_s) == (rb.status, rb.latency_s)
+        if ra.status == "completed":
+            assert ra.cut_value == rb.cut_value
+
+
+def test_service_metrics_registry_reconciles_with_stats():
+    svc, _rids = _soak()
+    snap = svc.metrics_registry().snapshot()
+    assert validate_metrics(snap) == []
+    st = svc.stats
+    assert snap["counters"]["service.completed"] == st.completed
+    assert snap["counters"]["service.shed"] == st.shed
+    assert snap["counters"]["service.expired"] == st.expired
+    assert snap["histograms"]["service.latency"] == st.latency.summary()
+    for t, ten in st.tenants.items():
+        assert snap["counters"][f"tenant.{t}.submitted"] == ten.submitted
+        assert (snap["histograms"][f"tenant.{t}.latency"]
+                == ten.latency.summary())
+
+
+def test_soak_2000_requests_trace_reconciles_with_terminal_accounting():
+    """The §8 acceptance headline: a 2,000-request traced virtual soak
+    produces a schema-valid trace whose terminal request spans reconcile
+    exactly with `ServiceStats` accounting."""
+    svc, rids = _soak(requests=2000, slots=16, inflight=2)
+    assert validate_trace_records(
+        [s.as_dict() for s in svc.trace.spans]) == []
+    spans = _request_spans(svc)
+    assert len(spans) == 2000
+    st = svc.stats
+    counts = {"completed": 0, "shed": 0, "expired": 0}
+    for s in spans:
+        counts[s.attrs["status"]] += 1
+    assert counts["completed"] == st.completed
+    assert counts["shed"] == st.shed
+    assert counts["expired"] == st.expired
+    assert sum(counts.values()) == st.terminal == len(rids) == 2000
+    # completed-latency stream: histogram count equals completed spans
+    assert st.latency.summary()["count"] == st.completed

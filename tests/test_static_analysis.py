@@ -334,6 +334,50 @@ def test_nondeterminism_guards_scheduler_path_allows_perf_counter():
     assert rep.findings == []
 
 
+_OBS_BAD = """
+import time
+
+def begin(name):
+    # direct clock read: bypasses the injectable clock, so a tracer
+    # running under a VirtualClock would stamp wall time into spans
+    return name, time.perf_counter()
+"""
+
+_OBS_CLEAN = """
+from repro.obs.clock import default_clock
+
+def begin(name, clock=default_clock):
+    return name, clock()
+"""
+
+
+def test_nondeterminism_obs_package_bans_all_clock_reads():
+    # inside repro.obs.* even the monotonic clocks the scheduler region
+    # allows are banned — timestamps must flow through the injectable
+    # clock so virtual-clock soaks stay bit-deterministic (DESIGN.md §8)
+    path = "src/repro/obs/snippet.py"
+    rep = run_on_sources({path: _OBS_BAD}, rules=["hot-nondeterminism"])
+    assert len(rep.findings) == 1, [f.render() for f in rep.findings]
+    assert "injectable clock" in rep.findings[0].message
+    rep = run_on_sources({path: _OBS_CLEAN}, rules=["hot-nondeterminism"])
+    assert rep.findings == []
+
+
+def test_nondeterminism_obs_clock_module_is_the_sanctioned_boundary():
+    # the clock module itself may touch time.* — it IS the boundary
+    rep = run_on_sources(
+        {"src/repro/obs/clock.py": _OBS_BAD}, rules=["hot-nondeterminism"]
+    )
+    assert rep.findings == []
+    # the carve-out is the obs package only: an unguarded, untraced
+    # module elsewhere may still read perf_counter freely
+    rep = run_on_sources(
+        {"src/repro/service/solver_api.py": _OBS_BAD},
+        rules=["hot-nondeterminism"],
+    )
+    assert rep.findings == []
+
+
 # ------------------------------------------------ suppression and baseline --
 def test_line_suppression_with_justification():
     src = _DIRECT_IMPORT.replace(
