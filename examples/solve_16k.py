@@ -48,6 +48,12 @@ ap.add_argument("--sharded-opt-steps", type=int, default=0,
                 help="Adam steps on oversized (model-sharded) subproblem "
                 "parameters, run through the sharded evolution "
                 "(DESIGN.md §2.6); 0 keeps the linear ramp")
+ap.add_argument("--kernel-tuning", action="store_true",
+                help="resolve Pallas block shapes from the committed "
+                "autotune cache (src/repro/kernels/tuning_cache.json, "
+                "DESIGN.md §2.7) instead of the hard-coded defaults; "
+                "regenerate with benchmarks/kernel_autotune.py "
+                "--write-cache")
 args = ap.parse_args()
 
 mesh_spec = None
@@ -62,6 +68,10 @@ if args.mesh:
 from repro.core import ParaQAOAConfig, solve, solve_distributed
 from repro.core.baselines import local_search
 from repro.core.graph import Graph
+from repro.kernels import tuning
+
+if args.kernel_tuning:
+    tuning.set_enabled(True)
 
 t0 = time.time()
 print(f"generating G({args.n}, {args.p}) ...", flush=True)

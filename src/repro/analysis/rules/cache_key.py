@@ -24,6 +24,14 @@ This rule makes the fix structural. For every builder decorated with
 
 Callers are expected to pass ``ops.get_implementation()`` *at the call
 site* (that read happens per call, outside the cache).
+
+The block-shape tuning state (`kernels.tuning`, DESIGN.md §2.7) is
+trace-time dispatch state of exactly the same kind, so rule 2 applies to
+``tuning.using_state(X)`` as well: inside a cached builder X must be a
+plain builder parameter (callers pass ``tuning.state()`` at the call
+site). Re-asserting tuning is not *required* — builders that never reach
+a Pallas launcher are tuning-insensitive — but a non-param re-assert is
+always the same cache-blindness bug.
 """
 
 from __future__ import annotations
@@ -39,6 +47,7 @@ _CACHE_DECORATORS = {
     "lru_cache",
 }
 _USING_IMPL = "repro.kernels.ops.using_implementation"
+_USING_TUNE = "repro.kernels.tuning.using_state"
 
 RULE_ID = "cache-key"
 
@@ -87,16 +96,21 @@ class CacheKeyRule:
         keyed = False
         findings: list[Finding] = []
         for sub in ast.walk(node):
-            if not (isinstance(sub, ast.Call) and
-                    mod.qualify(sub.func) == _USING_IMPL):
+            if not isinstance(sub, ast.Call):
+                continue
+            qual = mod.qualify(sub.func)
+            if qual not in (_USING_IMPL, _USING_TUNE):
                 continue
             arg = sub.args[0] if sub.args else None
             if isinstance(arg, ast.Name) and arg.id in params:
-                keyed = True
+                if qual == _USING_IMPL:
+                    keyed = True
             else:
+                fn_name = ("ops.using_implementation()" if qual == _USING_IMPL
+                           else "tuning.using_state()")
                 findings.append(mod.finding(
                     self.id, sub,
-                    "ops.using_implementation() inside cached builder "
+                    f"{fn_name} inside cached builder "
                     f"'{node.name}' must take a builder parameter, not "
                     "an expression the cache key cannot see",
                     symbol=node.name,

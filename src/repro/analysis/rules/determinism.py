@@ -26,6 +26,13 @@ Two protected regions:
      scheduler region allows — except inside `repro.obs.clock` itself,
      the one sanctioned wall-clock boundary.
 
+  4. **Measurement paths** (`repro.kernels.tuning`): the autotune
+     harness's kernel timings feed the committed tuning cache, so sweeps
+     must be replayable/mockable through the injectable clock exactly
+     like the obs package — every `time.*` / `datetime.*` read is banned
+     (including the monotonic clocks), with `repro.obs.clock` the only
+     way in.
+
 jax.random / numpy.random are not flagged: the former is the sanctioned
 mechanism, the latter is the tracer-hazard rule's jurisdiction.
 """
@@ -45,6 +52,10 @@ DETERMINISTIC_PATHS = ("repro.service.scheduler",)
 # the observability package: clock reads allowed only in the clock module
 OBS_PACKAGE = "repro.obs"
 OBS_CLOCK_MODULE = "repro.obs.clock"
+
+# measurement paths outside repro.obs held to the same injectable-clock
+# contract (the autotune timing helper lives here)
+MEASUREMENT_PATHS = ("repro.kernels.tuning",)
 
 # observability clocks: monotonic, never used for decisions
 _ALLOWED_CLOCKS = {
@@ -141,7 +152,8 @@ class HotNondeterminismRule:
         for mod in project.modules:
             in_obs = (mod.modname == OBS_PACKAGE
                       or mod.modname.startswith(OBS_PACKAGE + "."))
-            if not in_obs or mod.modname == OBS_CLOCK_MODULE:
+            in_measure = mod.modname in MEASUREMENT_PATHS
+            if not (in_obs or in_measure) or mod.modname == OBS_CLOCK_MODULE:
                 continue
             for node in ast.walk(mod.tree):
                 if not isinstance(node, ast.Call):
@@ -156,13 +168,19 @@ class HotNondeterminismRule:
                 if key in seen:
                     continue
                 seen.add(key)
+                kind = "observability" if in_obs else "measurement-path"
+                why = (
+                    "so virtual-clock soaks stay bit-deterministic with "
+                    "tracing on (DESIGN.md §8)" if in_obs else
+                    "so autotune sweeps are replayable/mockable "
+                    "(DESIGN.md §2.7)"
+                )
                 findings.append(mod.finding(
                     self.id, node,
-                    f"{reason} in observability module '{mod.modname}': "
-                    "tracer/metrics timestamps must flow through the "
+                    f"{reason} in {kind} module '{mod.modname}': "
+                    "timestamps must flow through the "
                     f"injectable clock ('{OBS_CLOCK_MODULE}."
-                    "default_clock') so virtual-clock soaks stay "
-                    "bit-deterministic with tracing on (DESIGN.md §8)",
+                    f"default_clock') {why}",
                 ))
         return findings
 

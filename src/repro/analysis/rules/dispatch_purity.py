@@ -20,7 +20,10 @@ Flags any import that binds a kernel implementation module — at any scope
   - tests/ and benchmarks/ (they compare impls against `ref` on purpose).
 
 `repro.kernels.ops` itself is importable from anywhere — it *is* the
-boundary.
+boundary. `repro.kernels.tuning` is likewise not an implementation
+module: it is the block-shape tuning state (DESIGN.md §2.7) that
+cached-program builders must key on and re-assert, exactly like the ops
+implementation — importing it cannot pin a call site to a backend.
 """
 
 from __future__ import annotations
@@ -32,7 +35,7 @@ from repro.analysis.engine import Finding, ModuleInfo, Project
 RULE_ID = "dispatch-purity"
 
 _KERNELS_PKG = "repro.kernels"
-_DISPATCH_OK = {"repro.kernels.ops", "repro.kernels"}
+_DISPATCH_OK = {"repro.kernels.ops", "repro.kernels", "repro.kernels.tuning"}
 
 
 def _allowed_module(mod: ModuleInfo) -> bool:

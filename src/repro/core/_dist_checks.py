@@ -220,6 +220,7 @@ def check_engine_interpret():
 
     wrap(fused_mod, "fused_phase_mixer_group")
     wrap(mixer_mod, "mixer_group_matmul")
+    wrap(mixer_mod, "mixer_group_strided")
     wrap(cutvals_mod, "cutvals_at")
     wrap(phase_mod, "expectation")
 
@@ -244,7 +245,12 @@ def check_engine_interpret():
         out[f"{key}_dispatch_fused_layer"] = fired.get(
             "fused_phase_mixer_group", 0
         ) > 0
-        out[f"{key}_dispatch_mixer"] = fired.get("mixer_group_matmul", 0) > 0
+        # either mixer launcher counts: mid-state groups take the fused
+        # strided-BlockSpec kernel, trailing (y == 1) groups the matmul
+        out[f"{key}_dispatch_mixer"] = (
+            fired.get("mixer_group_matmul", 0)
+            + fired.get("mixer_group_strided", 0)
+        ) > 0
         out[f"{key}_dispatch_cutvals_at"] = fired.get("cutvals_at", 0) > 0
         out[f"{key}_dispatch_expectation"] = fired.get("expectation", 0) > 0
         out[f"{key}_probs_close"] = bool(

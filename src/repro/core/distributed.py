@@ -53,6 +53,7 @@ from repro.core import engine
 from repro.core import merge as merge_mod
 from repro.core import qaoa as qaoa_mod
 from repro.kernels import ops
+from repro.kernels import tuning
 
 
 # ---------------------------------------------------------------------------
@@ -60,17 +61,21 @@ from repro.kernels import ops
 # ---------------------------------------------------------------------------
 @compat.cached_program
 def _solve_pool_program(
-    cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool, impl: str
+    cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool,
+    impl: str,
+    tune: tuple,
 ):
     # the per-shard `kernels.ops` dispatch is a trace-time choice, so
     # `ops.using_implementation` only reaches the pool if each
     # implementation gets its own compiled program; the keyed `impl` is
     # re-asserted during tracing because jit traces lazily on first call,
-    # possibly outside the context the program was requested under
+    # possibly outside the context the program was requested under. The
+    # `kernels.tuning` block-shape state is trace-time in the same way,
+    # so it is keyed and re-asserted alongside (DESIGN.md §2.7)
     spec = P(axes)
 
     def run(e, w, mk):
-        with ops.using_implementation(impl):
+        with ops.using_implementation(impl), tuning.using_state(tune):
             return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
 
     sharded = compat.shard_map(
@@ -109,7 +114,7 @@ def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
     # donate=False would otherwise compile byte-identical programs twice
     donate = bool(pad) and compat.supports_donation()
     program = _solve_pool_program(
-        cfg, mesh, axes, donate, ops.get_implementation()
+        cfg, mesh, axes, donate, ops.get_implementation(), tuning.state()
     )
     res = program(edges, weights, masks)
     return jax.tree.map(lambda x: x[:m], res)
@@ -139,6 +144,7 @@ def _sharded_qaoa_program(
     opt_steps: int,
     learning_rate: float,
     impl: str,
+    tune: tuple,
 ):
     """Cached sharded-statevector program over the shared engine.
 
@@ -149,7 +155,9 @@ def _sharded_qaoa_program(
     it is part of the cache key *and* re-asserted inside the traced
     function (jit traces lazily on first call, possibly outside the
     context the program was requested under) for
-    `ops.using_implementation` to reach the per-shard kernels.
+    `ops.using_implementation` to reach the per-shard kernels. ``tune``
+    keys and re-asserts the `kernels.tuning` block-shape state the same
+    way (DESIGN.md §2.7).
     """
     # `p_layers` is cache-key-only (like array shapes, re-handled by
     # jit's own cache)
@@ -186,7 +194,7 @@ def _sharded_qaoa_program(
             return res
 
     def local_run_impl(edges, weights, gammas, betas):
-        with ops.using_implementation(impl):
+        with ops.using_implementation(impl), tuning.using_state(tune):
             return local_run(edges, weights, gammas, betas)
 
     run = compat.shard_map(
@@ -229,6 +237,7 @@ def sharded_qaoa(
     program = _sharded_qaoa_program(
         n, int(gammas.shape[0]), 1, mesh, axis, top_k, schedule, group,
         int(opt_steps), float(learning_rate), ops.get_implementation(),
+        tuning.state(),
     )
     return program(edges, weights, gammas, betas)
 
@@ -265,6 +274,7 @@ def sharded_qaoa_batch(
     program = _sharded_qaoa_program(
         n, int(gammas.shape[0]), b, mesh, axis, top_k, schedule, group,
         int(opt_steps), float(learning_rate), ops.get_implementation(),
+        tuning.state(),
     )
     return program(edges, weights, gammas, betas)
 

@@ -179,8 +179,9 @@ def evolve(layout: Layout, cut: CutTable, gammas, betas):
     layout position, ``True`` when the state ends in layout B (odd p
     under the alternating schedule). Every op dispatches through
     `kernels.ops`; differentiable w.r.t. (gammas, betas) on both layout
-    kinds under the `xla` dispatch path (the Pallas kernels carry no AD
-    rule — `sharded_ascent` pins its gradient trace accordingly).
+    kinds under every dispatch path — the ops carry analytic custom-vjp
+    rules (DESIGN.md §2.7), so `jax.grad` re-enters the same kernels
+    with negated angles on the backward trace.
     """
     re, im = init_state(layout)
     if isinstance(layout, FlatLayout):
@@ -291,12 +292,11 @@ def sharded_ascent(
     so the Adam moments stay replicated and the ascent is deterministic
     across shards.
 
-    The *differentiated* evolution always traces the `xla` reference
-    path: the Pallas kernels carry no AD rule, so `jax.grad` through a
-    `pallas`/`pallas_interpret`-dispatched evolve would fail (a
-    `custom_vjp` on the kernels is a ROADMAP follow-up). Only this
-    ascent loop is pinned — the final measured evolution still runs
-    whatever implementation the caller selected.
+    The differentiated evolution runs under the caller's active
+    implementation: the `kernels.ops` entry points carry analytic
+    custom-vjp rules (DESIGN.md §2.7), so the forward and backward
+    traces fire the same dispatched kernels — the historical
+    `using_implementation("xla")` gradient pin is gone.
     """
 
     if isinstance(gammas, jax.core.Tracer):
@@ -316,5 +316,4 @@ def sharded_ascent(
             lambda x: jax.lax.psum(x, layout.axis), raw_grad(params)
         )
 
-    with ops.using_implementation("xla"):  # dispatch is a trace-time choice
-        return adam_scan(grad_fn, (gammas, betas), steps, learning_rate)
+    return adam_scan(grad_fn, (gammas, betas), steps, learning_rate)

@@ -26,6 +26,7 @@ from repro import compat
 from repro.core import engine
 from repro.core.graph import Graph
 from repro.kernels import ops
+from repro.kernels import tuning
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,16 +78,16 @@ def optimize_params(cutv, n: int, cfg: QAOAConfig):
 
     The update rule is the shared `engine.adam_scan` — the same scan the
     sharded ascent runs per shard (DESIGN.md §2.6). Like
-    `engine.sharded_ascent`, the *differentiated* evolution is pinned to
-    the `xla` dispatch path (the Pallas kernels carry no AD rule); the
-    final measured evolution still runs the caller's implementation."""
+    `engine.sharded_ascent`, the differentiated evolution runs under the
+    caller's active implementation: the `kernels.ops` custom-vjp rules
+    (DESIGN.md §2.7) make the backward trace fire the same dispatched
+    kernels, so no `xla` gradient pin is needed."""
     g0, b0 = linear_ramp_init(cfg.p_layers, cfg.ramp_delta)
 
     neg_obj = lambda p: -qaoa_expectation(p, cutv, n, group=cfg.mixer_group)
-    with ops.using_implementation("xla"):  # dispatch is a trace-time choice
-        return engine.adam_scan(
-            jax.grad(neg_obj), (g0, b0), cfg.opt_steps, cfg.learning_rate
-        )
+    return engine.adam_scan(
+        jax.grad(neg_obj), (g0, b0), cfg.opt_steps, cfg.learning_rate
+    )
 
 
 def topk_marginal(re, im, n: int, real_mask, k: int):
@@ -125,8 +126,8 @@ solve_subgraph_batch = jax.vmap(solve_subgraph, in_axes=(0, 0, 0, None))
 
 
 @compat.cached_program
-def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str):
-    """Impl-keyed builder behind `solve_subgraph_batch_program`.
+def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str, tune: tuple):
+    """Impl- and tuning-keyed builder behind `solve_subgraph_batch_program`.
 
     The `kernels.ops` dispatch reads the active implementation at
     *trace* time, so two impls must map to two compiled programs for
@@ -135,10 +136,13 @@ def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str):
     is re-asserted inside the traced function: jit traces lazily on
     first call, which may happen outside the context the program was
     requested under — the key and the traced dispatch must not disagree.
+    ``tune`` is the `kernels.tuning` block-shape state (DESIGN.md §2.7),
+    re-asserted the same way and for the same reason — tile choices are
+    trace-time too, and the key makes them visible to the compile ledger.
     """
 
     def run(e, w, m):
-        with ops.using_implementation(impl):
+        with ops.using_implementation(impl), tuning.using_state(tune):
             return solve_subgraph_batch(e, w, m, cfg)
 
     return jax.jit(run)
@@ -155,9 +159,12 @@ def solve_subgraph_batch_program(cfg: QAOAConfig):
     differently from the fused program; the default 30 Adam steps
     (``QAOAConfig.opt_steps``) on a non-convex landscape amplify that
     last-ulp difference into different top-k picks). The underlying
-    cache keys on (config, active `kernels.ops` implementation).
+    cache keys on (config, active `kernels.ops` implementation, active
+    `kernels.tuning` block-shape state).
     """
-    return _solve_subgraph_batch_program(cfg, ops.get_implementation())
+    return _solve_subgraph_batch_program(
+        cfg, ops.get_implementation(), tuning.state()
+    )
 
 
 def index_to_bits(indices: jnp.ndarray, n: int) -> jnp.ndarray:

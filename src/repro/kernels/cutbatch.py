@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tuning
+
 BATCH_TILE = 128
 K_CHUNK = 512
 
@@ -40,16 +42,14 @@ def _kernel(nk: int, wtot_ref, s_chunk_ref, a_ref, s_full_ref, out_ref, acc_ref)
         out_ref[...] = (wtot_ref[0, 0] - 0.5 * quad) * 0.5
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cut_batch_dense(spins, adjacency, total_weight, *, interpret: bool = False):
-    """spins (B, V) ±1 float32; adjacency (V, V) float32 → (B,) cut values."""
+@functools.partial(jax.jit, static_argnames=("bt", "kc", "interpret"))
+def _cut_batch_dense(spins, adjacency, total_weight, *, bt: int, kc: int,
+                     interpret: bool):
     b, v = spins.shape
-    bt = min(BATCH_TILE, b)
-    kc = min(K_CHUNK, v)
     # pad batch and V to tile multiples; padded spins=+1 rows are discarded,
     # padded adjacency rows/cols are zero so they never contribute.
-    bp = ((b + bt - 1) // bt) * bt
-    vp = ((v + kc - 1) // kc) * kc
+    bp = tuning.round_up(b, bt)
+    vp = tuning.round_up(v, kc)
     sp = jnp.ones((bp, vp), jnp.float32).at[:b, :v].set(spins)
     ap = jnp.zeros((vp, vp), jnp.float32).at[:v, :v].set(adjacency)
     wtot = jnp.asarray(total_weight, jnp.float32).reshape(1, 1)
@@ -70,3 +70,14 @@ def cut_batch_dense(spins, adjacency, total_weight, *, interpret: bool = False):
         interpret=interpret,
     )(wtot, sp, ap, sp)
     return out[:b, 0]
+
+
+def cut_batch_dense(spins, adjacency, total_weight, *, interpret: bool = False):
+    """spins (B, V) ±1 float32; adjacency (V, V) float32 → (B,) cut values."""
+    b, v = spins.shape
+    _, bt = tuning.pad_and_tile(
+        b, tuning.param("cut_batch_dense", v, "batch_tile", BATCH_TILE))
+    _, kc = tuning.pad_and_tile(
+        v, tuning.param("cut_batch_dense", v, "k_chunk", K_CHUNK))
+    return _cut_batch_dense(spins, adjacency, total_weight, bt=bt, kc=kc,
+                            interpret=interpret)

@@ -12,6 +12,10 @@ block across the inner axis is the canonical accumulation pattern).
 
 VMEM budget per step: TILE_B×EDGE_CHUNK int32 bits plane (1024×256×4 = 1 MiB)
 plus the (TILE_B, 1) accumulator — comfortably under a v5e core's ~16 MiB.
+
+Pad/tile arithmetic lives in `kernels.tuning` (`pad_chunks`, `pad_and_tile`)
+— one seam shared with cutbatch.py — and the block constants resolve
+through the same module's per-shape-bucket tuning table.
 """
 
 from __future__ import annotations
@@ -22,26 +26,39 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
+
 TILE_B = 1024  # basis states per block (8 sublanes × 128 lanes)
 EDGE_CHUNK = 256  # edges per accumulation step
 
 
-def _kernel(ei_ref, ej_ref, w_ref, out_ref):
+def _pad_edges(edges, weights, chunk: int):
+    """Edge arrays padded to a chunk multiple; padding rows (0,0,w=0)
+    contribute zero. Shared by `cutvals` and `cutvals_at`."""
+    e = edges.shape[0]
+    e_pad = tuning.pad_chunks(e, chunk)
+    ei = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 0])
+    ej = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 1])
+    w = jnp.zeros((e_pad,), jnp.float32).at[:e].set(weights)
+    return ei, ej, w, e_pad
+
+
+def _kernel(tile: int, ei_ref, ej_ref, w_ref, out_ref):
     kb = pl.program_id(0)
     ke = pl.program_id(1)
 
-    # basis indices covered by this block: kb*TILE_B + [0, TILE_B)
-    row = jax.lax.broadcasted_iota(jnp.int32, (TILE_B, 1), 0)
-    idx = kb * TILE_B + row  # (TILE_B, 1)
+    # basis indices covered by this block: kb*tile + [0, tile)
+    row = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    idx = kb * tile + row  # (tile, 1)
 
-    ei = ei_ref[...].reshape(1, EDGE_CHUNK)  # (1, E)
-    ej = ej_ref[...].reshape(1, EDGE_CHUNK)
-    w = w_ref[...].reshape(EDGE_CHUNK, 1)  # (E, 1)
+    ei = ei_ref[...].reshape(1, -1)  # (1, E)
+    ej = ej_ref[...].reshape(1, -1)
+    w = w_ref[...].reshape(-1, 1)  # (E, 1)
 
-    crossed = ((idx >> ei) ^ (idx >> ej)) & 1  # (TILE_B, E)
+    crossed = ((idx >> ei) ^ (idx >> ej)) & 1  # (tile, E)
     partial = jnp.dot(
         crossed.astype(jnp.float32), w, preferred_element_type=jnp.float32
-    )  # (TILE_B, 1)
+    )  # (tile, 1)
 
     @pl.when(ke == 0)
     def _init():
@@ -52,33 +69,18 @@ def _kernel(ei_ref, ej_ref, w_ref, out_ref):
         out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnums=(0,), static_argnames=("interpret",))
-def cutvals(n: int, edges, weights, *, interpret: bool = False):
-    """(2^n,) float32 cut values. edges (E,2) int32, weights (E,) f32."""
+@functools.partial(
+    jax.jit, static_argnums=(0,), static_argnames=("tile", "chunk", "interpret"))
+def _cutvals(n: int, edges, weights, *, tile: int, chunk: int, interpret: bool):
     dim = 2**n
-    e = edges.shape[0]
-    # pad edges to a chunk multiple (padding rows (0,0,w=0) contribute zero)
-    e_pad = max(EDGE_CHUNK, ((e + EDGE_CHUNK - 1) // EDGE_CHUNK) * EDGE_CHUNK)
-    ei = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 0])
-    ej = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 1])
-    w = jnp.zeros((e_pad,), jnp.float32).at[:e].set(weights)
-
-    if dim < TILE_B:
-        # small instances: single unblocked call
-        tile = dim
-        grid = (1, e_pad // EDGE_CHUNK)
-    else:
-        tile = TILE_B
-        grid = (dim // tile, e_pad // EDGE_CHUNK)
-
-    kernel = _kernel if tile == TILE_B else functools.partial(_small_kernel, tile)
+    ei, ej, w, e_pad = _pad_edges(edges, weights, chunk)
     out = pl.pallas_call(
-        kernel,
-        grid=grid,
+        functools.partial(_kernel, tile),
+        grid=(dim // tile, e_pad // chunk),
         in_specs=[
-            pl.BlockSpec((EDGE_CHUNK,), lambda kb, ke: (ke,)),
-            pl.BlockSpec((EDGE_CHUNK,), lambda kb, ke: (ke,)),
-            pl.BlockSpec((EDGE_CHUNK,), lambda kb, ke: (ke,)),
+            pl.BlockSpec((chunk,), lambda kb, ke: (ke,)),
+            pl.BlockSpec((chunk,), lambda kb, ke: (ke,)),
+            pl.BlockSpec((chunk,), lambda kb, ke: (ke,)),
         ],
         out_specs=pl.BlockSpec((tile, 1), lambda kb, ke: (kb, 0)),
         out_shape=jax.ShapeDtypeStruct((dim, 1), jnp.float32),
@@ -87,11 +89,20 @@ def cutvals(n: int, edges, weights, *, interpret: bool = False):
     return out.reshape(dim)
 
 
+def cutvals(n: int, edges, weights, *, interpret: bool = False):
+    """(2^n,) float32 cut values. edges (E,2) int32, weights (E,) f32."""
+    dim = 2**n
+    tile = tuning.clamp_tile(dim, tuning.param("cutvals", dim, "tile_b", TILE_B))
+    chunk = tuning.param("cutvals", dim, "edge_chunk", EDGE_CHUNK)
+    return _cutvals(n, edges, weights, tile=tile, chunk=chunk,
+                    interpret=interpret)
+
+
 def _at_kernel(ei_ref, ej_ref, w_ref, idx_ref, out_ref):
-    """Like `_kernel`/`_small_kernel` but the basis indices come from an
-    input block instead of the grid position — the sharded-statevector
-    case, where each device owns an arbitrary slice/permutation of the
-    amplitude space (DESIGN.md §2.6)."""
+    """Like `_kernel` but the basis indices come from an input block
+    instead of the grid position — the sharded-statevector case, where
+    each device owns an arbitrary slice/permutation of the amplitude
+    space (DESIGN.md §2.6)."""
     ke = pl.program_id(1)
     idx = idx_ref[...].reshape(-1, 1)  # (tile, 1)
     ei = ei_ref[...].reshape(1, -1)
@@ -111,24 +122,18 @@ def _at_kernel(ei_ref, ej_ref, w_ref, idx_ref, out_ref):
         out_ref[...] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def cutvals_at(idx, edges, weights, *, interpret: bool = False):
-    """Cut values at arbitrary basis indices: (M,) f32 for (M,) int32 idx."""
+@functools.partial(
+    jax.jit, static_argnames=("tile", "chunk", "interpret"))
+def _cutvals_at(idx, edges, weights, *, tile: int, chunk: int, interpret: bool):
     m = idx.shape[0]
-    e = edges.shape[0]
-    e_pad = max(EDGE_CHUNK, ((e + EDGE_CHUNK - 1) // EDGE_CHUNK) * EDGE_CHUNK)
-    ei = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 0])
-    ej = jnp.zeros((e_pad,), jnp.int32).at[:e].set(edges[:, 1])
-    w = jnp.zeros((e_pad,), jnp.float32).at[:e].set(weights)
-
-    tile = min(TILE_B, m)
-    m_pad = ((m + tile - 1) // tile) * tile
+    ei, ej, w, e_pad = _pad_edges(edges, weights, chunk)
+    m_pad = tuning.round_up(m, tile)
     idx_p = jnp.zeros((m_pad, 1), jnp.int32).at[:m, 0].set(idx)
 
-    chunk_spec = pl.BlockSpec((EDGE_CHUNK,), lambda kb, ke: (ke,))
+    chunk_spec = pl.BlockSpec((chunk,), lambda kb, ke: (ke,))
     out = pl.pallas_call(
         _at_kernel,
-        grid=(m_pad // tile, e_pad // EDGE_CHUNK),
+        grid=(m_pad // tile, e_pad // chunk),
         in_specs=[
             chunk_spec,
             chunk_spec,
@@ -142,21 +147,11 @@ def cutvals_at(idx, edges, weights, *, interpret: bool = False):
     return out.reshape(m_pad)[:m]
 
 
-def _small_kernel(tile, ei_ref, ej_ref, w_ref, out_ref):
-    ke = pl.program_id(1)
-    row = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
-    ei = ei_ref[...].reshape(1, -1)
-    ej = ej_ref[...].reshape(1, -1)
-    w = w_ref[...].reshape(-1, 1)
-    crossed = ((row >> ei) ^ (row >> ej)) & 1
-    partial = jnp.dot(
-        crossed.astype(jnp.float32), w, preferred_element_type=jnp.float32
-    )
-
-    @pl.when(ke == 0)
-    def _init():
-        out_ref[...] = partial
-
-    @pl.when(ke != 0)
-    def _acc():
-        out_ref[...] += partial
+def cutvals_at(idx, edges, weights, *, interpret: bool = False):
+    """Cut values at arbitrary basis indices: (M,) f32 for (M,) int32 idx."""
+    m = idx.shape[0]
+    _, tile = tuning.pad_and_tile(
+        m, tuning.param("cutvals_at", m, "tile_b", TILE_B))
+    chunk = tuning.param("cutvals_at", m, "edge_chunk", EDGE_CHUNK)
+    return _cutvals_at(idx, edges, weights, tile=tile, chunk=chunk,
+                       interpret=interpret)

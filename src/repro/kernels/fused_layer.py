@@ -6,12 +6,17 @@ One VMEM round-trip applies the whole start of a QAOA layer:
 
 The unfused XLA path reads/writes the statevector twice (phase pass, then
 mixer pass); fusing halves the HBM traffic of that段 — exactly §Perf C3.
-The U matrix is generated in-registers from β (popcount(a⊕b)), as in
-mixer.py; the cut-value block rides along the same row tiles.
+The U matrix is generated in-registers from β (`mixer.rx_group_mats`); the
+cut-value block rides along the same row tiles.
 
 Layout contract: state viewed as (R, 2^k) where the trailing axis is the
 first mixer group (qubits 0..k-1) — the natural layout-A view, so no extra
 relayout versus the unfused path.
+
+``reverse=True`` swaps the in-kernel order to mixer-group *then* phase:
+called with (−γ, −β) that is exactly the adjoint of the forward kernel,
+which is how the `kernels.ops` layer custom-vjp backward runs this same
+kernel for the gradient trace (DESIGN.md §2.7).
 """
 
 from __future__ import annotations
@@ -22,64 +27,56 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import popcount
+from repro.kernels import tuning
+from repro.kernels.mixer import rx_group_mats
 
 ROW_TILE = 512
 
 
-def _kernel(k: int, g_ref, b_ref, c_ref, re_ref, im_ref, ore_ref, oim_ref):
-    dk = 2**k
+def _kernel(k: int, reverse: bool, g_ref, b_ref, c_ref, re_ref, im_ref,
+            ore_ref, oim_ref):
     gamma = g_ref[0, 0]
-    beta = b_ref[0, 0]
-
-    # ---- phase: psi *= e^{-i γ c} ----------------------------------------
     cv = c_ref[...]
     cs = jnp.cos(gamma * cv)
     sn = jnp.sin(gamma * cv)
+    cmat, dmat = rx_group_mats(b_ref[0, 0], k)
+    f32 = jnp.float32
+
     re = re_ref[...]
     im = im_ref[...]
-    pre = re * cs + im * sn
-    pim = im * cs - re * sn
 
-    # ---- fused mixer group: right-multiply by symmetric C + iD ----------
-    a = jax.lax.broadcasted_iota(jnp.int32, (dk, dk), 0)
-    b = jax.lax.broadcasted_iota(jnp.int32, (dk, dk), 1)
-    d = popcount(a ^ b).astype(jnp.float32)
-    kk = jnp.float32(k)
-    cb, sb = jnp.cos(beta), jnp.sin(beta)
-    mag = (
-        jnp.power(jnp.abs(cb), kk - d)
-        * jnp.power(jnp.abs(sb), d)
-        * jnp.where(cb < 0, (-1.0) ** (kk - d), 1.0)
-        * jnp.where(sb < 0, (-1.0) ** d, 1.0)
-    )
-    m4 = popcount(a ^ b) % 4
-    cmat = mag * jnp.where(m4 == 0, 1.0, jnp.where(m4 == 2, -1.0, 0.0))
-    dmat = mag * jnp.where(m4 == 1, -1.0, jnp.where(m4 == 3, 1.0, 0.0))
+    def phase(pr, pi):
+        return pr * cs + pi * sn, pi * cs - pr * sn
 
-    f32 = jnp.float32
-    ore_ref[...] = jnp.dot(pre, cmat, preferred_element_type=f32) - jnp.dot(
-        pim, dmat, preferred_element_type=f32
-    )
-    oim_ref[...] = jnp.dot(pim, cmat, preferred_element_type=f32) + jnp.dot(
-        pre, dmat, preferred_element_type=f32
-    )
+    def mixer(pr, pi):
+        return (
+            jnp.dot(pr, cmat, preferred_element_type=f32)
+            - jnp.dot(pi, dmat, preferred_element_type=f32),
+            jnp.dot(pi, cmat, preferred_element_type=f32)
+            + jnp.dot(pr, dmat, preferred_element_type=f32),
+        )
+
+    if reverse:
+        re, im = mixer(re, im)
+        re, im = phase(re, im)
+    else:
+        re, im = phase(re, im)
+        re, im = mixer(re, im)
+    ore_ref[...] = re
+    oim_ref[...] = im
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def fused_phase_mixer_group(re_mat, im_mat, cutv_mat, gamma, beta, k: int,
-                            *, interpret: bool = False):
-    """(R, 2^k) state planes + matching cut values → one fused pass."""
+@functools.partial(
+    jax.jit, static_argnames=("k", "reverse", "tile", "interpret"))
+def _fused_phase_mixer_group(re_mat, im_mat, cutv_mat, gamma, beta, k: int,
+                             *, reverse: bool, tile: int, interpret: bool):
     r, dk = re_mat.shape
-    assert dk == 2**k and cutv_mat.shape == (r, dk)
-    tile = min(ROW_TILE, r)
-    assert r % tile == 0, (r, tile)
     g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
     b = jnp.asarray(beta, jnp.float32).reshape(1, 1)
     spec = pl.BlockSpec((tile, dk), lambda i: (i, 0))
     scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
     ore, oim = pl.pallas_call(
-        functools.partial(_kernel, k),
+        functools.partial(_kernel, k, reverse),
         grid=(r // tile,),
         in_specs=[scal, scal, spec, spec, spec],
         out_specs=[spec, spec],
@@ -90,3 +87,16 @@ def fused_phase_mixer_group(re_mat, im_mat, cutv_mat, gamma, beta, k: int,
         interpret=interpret,
     )(g, b, cutv_mat, re_mat, im_mat)
     return ore, oim
+
+
+def fused_phase_mixer_group(re_mat, im_mat, cutv_mat, gamma, beta, k: int,
+                            *, reverse: bool = False, interpret: bool = False):
+    """(R, 2^k) state planes + matching cut values → one fused pass."""
+    r, dk = re_mat.shape
+    assert dk == 2**k and cutv_mat.shape == (r, dk)
+    tile = tuning.clamp_tile(
+        r, tuning.param("fused_layer", r, "row_tile", ROW_TILE))
+    return _fused_phase_mixer_group(
+        re_mat, im_mat, cutv_mat, gamma, beta, k,
+        reverse=reverse, tile=tile, interpret=interpret,
+    )

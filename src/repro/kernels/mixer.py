@@ -8,8 +8,20 @@ kernel* from β and popcount(a⊕b) (zero HBM traffic for the operator):
     C = Re U (d even), D = Im U (d odd) — both symmetric, so the state can
     be right-multiplied:  out = S·C ± (i) S·D  on (re, im) planes.
 
-Grid: row tiles of the (R, 2^k) state view; per step two MXU matmuls
-(4 dots across the two planes).
+Two launchers cover the two layouts a group call sees:
+
+  - `mixer_group_matmul`: the group occupies the trailing axis of a
+    (R, 2^k) view — row tiles, two MXU matmuls per step.
+  - `mixer_group_strided`: the group sits mid-state, i.e. the flat state
+    factors as (X, 2^k, Y) with Y > 1. The strided BlockSpec index map
+    carves (tx, 2^k, ty) blocks straight out of that view and contracts
+    the middle axis in-kernel, so the old (X, 2^k, Y) → (X·Y, 2^k)
+    moveaxis relayout (and its XLA copies on both sides of every group
+    call) is gone — measured in `results/BENCH_kernel_autotune.json`
+    (§Perf C11).
+
+Block sizes resolve through `kernels.tuning` (autotuned per shape bucket
+when enabled, hard defaults otherwise) as static jit arguments.
 """
 
 from __future__ import annotations
@@ -20,23 +32,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import tuning
 from repro.kernels.ref import popcount
 
 ROW_TILE = 512
+X_TILE = 8  # strided launcher: rows of the (X, 2^k, Y) view per block
+Y_TILE = 128  # strided launcher: trailing-stride lanes per block
 
 
-def _mixer_kernel(k: int, b_ref, re_ref, im_ref, ore_ref, oim_ref):
+def rx_group_mats(beta, k: int):
+    """(C, D) = (Re, Im) of the 2^k RX-group unitary, generated in-registers.
+
+    Shared by every mixer-bearing kernel (grouped, strided, fused layer).
+    Integer powers via the exponent trick: lax.pow on non-negative
+    magnitudes + sign bookkeeping (exact for negative bases). Both C and D
+    are symmetric; C is even in β and D odd, so the adjoint of the group
+    unitary is the same generator evaluated at −β — the identity the
+    `kernels.ops` custom-vjp rules run on.
+    """
     dk = 2**k
-    beta = b_ref[0, 0]
     a = jax.lax.broadcasted_iota(jnp.int32, (dk, dk), 0)
     b = jax.lax.broadcasted_iota(jnp.int32, (dk, dk), 1)
     d = popcount(a ^ b)
-    cb, sb = jnp.cos(beta), jnp.sin(beta)
-    # integer powers by cumprod-free exponent trick: build per-entry products
-    # via d as exponent on a (k+1)-entry lookup generated with lax.pow on
-    # non-negative magnitudes + sign bookkeeping (exact for negative bases).
     dd = d.astype(jnp.float32)
     kk = jnp.float32(k)
+    cb, sb = jnp.cos(beta), jnp.sin(beta)
     mag = (
         jnp.power(jnp.abs(cb), kk - dd)
         * jnp.power(jnp.abs(sb), dd)
@@ -46,7 +66,11 @@ def _mixer_kernel(k: int, b_ref, re_ref, im_ref, ore_ref, oim_ref):
     m4 = d % 4
     cmat = mag * jnp.where(m4 == 0, 1.0, jnp.where(m4 == 2, -1.0, 0.0))
     dmat = mag * jnp.where(m4 == 1, -1.0, jnp.where(m4 == 3, 1.0, 0.0))
+    return cmat, dmat
 
+
+def _mixer_kernel(k: int, b_ref, re_ref, im_ref, ore_ref, oim_ref):
+    cmat, dmat = rx_group_mats(b_ref[0, 0], k)
     re = re_ref[...]
     im = im_ref[...]
     f32 = jnp.float32
@@ -58,13 +82,10 @@ def _mixer_kernel(k: int, b_ref, re_ref, im_ref, ore_ref, oim_ref):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def mixer_group_matmul(re_mat, im_mat, beta, k: int, *, interpret: bool = False):
-    """Apply RX^{⊗k} to the trailing axis of (R, 2^k) state views."""
+@functools.partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def _mixer_group_matmul(re_mat, im_mat, beta, k: int, *, tile: int,
+                        interpret: bool):
     r, dk = re_mat.shape
-    assert dk == 2**k, (dk, k)
-    tile = min(ROW_TILE, r)
-    assert r % tile == 0, (r, tile)
     b = jnp.asarray(beta, jnp.float32).reshape(1, 1)
     spec = pl.BlockSpec((tile, dk), lambda i: (i, 0))
     ore, oim = pl.pallas_call(
@@ -81,14 +102,91 @@ def mixer_group_matmul(re_mat, im_mat, beta, k: int, *, interpret: bool = False)
     return ore, oim
 
 
+def mixer_group_matmul(re_mat, im_mat, beta, k: int, *, interpret: bool = False):
+    """Apply RX^{⊗k} to the trailing axis of (R, 2^k) state views."""
+    r, dk = re_mat.shape
+    assert dk == 2**k, (dk, k)
+    tile = tuning.clamp_tile(r, tuning.param("mixer_matmul", r, "row_tile",
+                                             ROW_TILE))
+    return _mixer_group_matmul(re_mat, im_mat, beta, k, tile=tile,
+                               interpret=interpret)
+
+
+def _mixer_strided_kernel(k: int, b_ref, re_ref, im_ref, ore_ref, oim_ref):
+    cmat, dmat = rx_group_mats(b_ref[0, 0], k)
+    re = re_ref[...]  # (tx, 2^k, ty): group axis is the middle stride
+    im = im_ref[...]
+    f32 = jnp.float32
+    ore_ref[...] = jnp.einsum(
+        "xby,ba->xay", re, cmat, preferred_element_type=f32
+    ) - jnp.einsum("xby,ba->xay", im, dmat, preferred_element_type=f32)
+    oim_ref[...] = jnp.einsum(
+        "xby,ba->xay", im, cmat, preferred_element_type=f32
+    ) + jnp.einsum("xby,ba->xay", re, dmat, preferred_element_type=f32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "tile_x", "tile_y", "interpret"))
+def _mixer_group_strided(re3, im3, beta, k: int, *, tile_x: int, tile_y: int,
+                         interpret: bool):
+    x, dk, y = re3.shape
+    b = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    spec = pl.BlockSpec((tile_x, dk, tile_y), lambda i, j: (i, 0, j))
+    ore, oim = pl.pallas_call(
+        functools.partial(_mixer_strided_kernel, k),
+        grid=(x // tile_x, y // tile_y),
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j: (0, 0)), spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((x, dk, y), jnp.float32),
+            jax.ShapeDtypeStruct((x, dk, y), jnp.float32),
+        ],
+        interpret=interpret,
+    )(b, re3, im3)
+    return ore, oim
+
+
+def mixer_group_strided(re3, im3, beta, k: int, *, interpret: bool = False):
+    """Apply RX^{⊗k} to the *middle* axis of (X, 2^k, Y) state views —
+    the relayout-free path for groups above the low bits."""
+    x, dk, y = re3.shape
+    assert dk == 2**k, (dk, k)
+    rows = x * y
+    tile_x = tuning.clamp_tile(
+        x, tuning.param("mixer_strided", rows, "tile_x", X_TILE))
+    tile_y = tuning.clamp_tile(
+        y, tuning.param("mixer_strided", rows, "tile_y", Y_TILE))
+    return _mixer_group_strided(re3, im3, beta, k, tile_x=tile_x,
+                                tile_y=tile_y, interpret=interpret)
+
+
 def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta, *,
                      interpret: bool = False):
     """RX(2β)^{⊗nbits} on qubits [lo_bit, lo_bit+nbits) of a flat 2^n state.
 
-    The wrapper owns the (X, 2^k, Y) → (X·Y, 2^k) relayout around the
-    kernel call; XLA lowers it to on-chip relayout copies. Fusing the
-    transpose into the kernel is tracked as a §Perf candidate.
+    lo_bit == 0 is the layout-A fast path (group on the trailing axis,
+    plain row-tiled matmul). For lo_bit > 0 the strided kernel contracts
+    the middle axis of the (X, 2^nbits, Y) view in place — the reshapes
+    here are metadata-only, so no relayout copies are issued.
     """
+    k = nbits
+    x = 2 ** (n - lo_bit - k)
+    y = 2**lo_bit
+    re3 = re.reshape(x, 2**k, y)
+    im3 = im.reshape(x, 2**k, y)
+    if y == 1:
+        re_m, im_m = re3.reshape(x, 2**k), im3.reshape(x, 2**k)
+        re_m, im_m = mixer_group_matmul(re_m, im_m, beta, k, interpret=interpret)
+        return re_m.reshape(-1), im_m.reshape(-1)
+    re_m, im_m = mixer_group_strided(re3, im3, beta, k, interpret=interpret)
+    return re_m.reshape(-1), im_m.reshape(-1)
+
+
+def apply_mixer_bits_relayout(re, im, n: int, lo_bit: int, nbits: int, beta, *,
+                              interpret: bool = False):
+    """Pre-§Perf-C11 path: moveaxis the group to the trailing axis, run the
+    row-tiled matmul, moveaxis back. Kept as the measured baseline for the
+    autotune harness's relayout comparison (and as a parity oracle)."""
     k = nbits
     x = 2 ** (n - lo_bit - k)
     y = 2**lo_bit

@@ -9,6 +9,17 @@
 
 The jnp reference path *is* `kernels.ref` — there is exactly one source of
 truth for each op's semantics.
+
+Differentiability (DESIGN.md §2.7): the state-evolution entry points —
+`apply_phase`, `apply_mixer_bits`, `apply_layer`, `expectation` — carry
+analytic `jax.custom_vjp` rules registered here, *above* the dispatch.
+The QAOA layer unitaries are their own adjoints up to angle sign (the
+phase is a rotation by γ·c; the mixer-group generator is even in β on its
+real part and odd on its imaginary part), so every backward pass re-enters
+the same dispatch with negated angles — the gradient trace runs whatever
+implementation the forward ran, and the ascent loops in core/engine.py and
+core/qaoa.py need no `using_implementation("xla")` pin. The residual
+angle/cut-value gradients are cheap elementwise reductions left to XLA.
 """
 
 from __future__ import annotations
@@ -72,6 +83,13 @@ def _note(op: str, x) -> None:
         get_ledger().note_op(op, get_implementation())
 
 
+def _f32(x):
+    """Canonicalize an angle before it crosses the custom_vjp boundary:
+    python floats are weakly typed and would make the cotangent aval
+    mismatch the primal's inside `defvjp`."""
+    return jnp.asarray(x, jnp.float32)
+
+
 def cutvals(n: int, edges, weights):
     _note("cutvals", edges)
     p = _pallas()
@@ -92,8 +110,11 @@ def cutvals_at(idx, edges, weights):
     return ref.cutvals_at(idx, edges, weights)
 
 
-def apply_phase(re, im, cutv, gamma):
-    _note("apply_phase", re)
+# ---------------------------------------------------------------------------
+# apply_phase — diagonal cost rotation, VJP = same rotation at −γ
+# ---------------------------------------------------------------------------
+
+def _phase_dispatch(re, im, cutv, gamma):
     p = _pallas()
     if p["use"]:
         from repro.kernels import phase as k
@@ -102,18 +123,40 @@ def apply_phase(re, im, cutv, gamma):
     return ref.apply_phase(re, im, cutv, gamma)
 
 
-def apply_mixer(re, im, n: int, beta, group: int = 7):
-    _note("apply_mixer", re)
-    p = _pallas()
-    if p["use"]:
-        from repro.kernels import mixer as k
-
-        return k.apply_mixer(re, im, n, beta, group=group, interpret=p["interpret"])
-    return ref.apply_mixer(re, im, n, beta, group=group)
+@jax.custom_vjp
+def _phase_vjp(re, im, cutv, gamma):
+    return _phase_dispatch(re, im, cutv, gamma)
 
 
-def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
-    _note("apply_mixer_bits", re)
+def _phase_fwd(re, im, cutv, gamma):
+    out = _phase_dispatch(re, im, cutv, gamma)
+    return out, (re, im, cutv, gamma)
+
+
+def _phase_bwd(res, cot):
+    re, im, cutv, gamma = res
+    d_ore, d_oim = cot
+    # the rotation's transpose is the rotation at −γ: same dispatched kernel
+    g_re, g_im = _phase_dispatch(d_ore, d_oim, cutv, -gamma)
+    t = im * g_re - re * g_im
+    d_gamma = jnp.sum(cutv * t)
+    d_cutv = gamma * t
+    return g_re, g_im, d_cutv, d_gamma
+
+
+_phase_vjp.defvjp(_phase_fwd, _phase_bwd)
+
+
+def apply_phase(re, im, cutv, gamma):
+    _note("apply_phase", re)
+    return _phase_vjp(re, im, cutv, _f32(gamma))
+
+
+# ---------------------------------------------------------------------------
+# apply_mixer_bits — RX group, VJP = same group at −β
+# ---------------------------------------------------------------------------
+
+def _mixer_bits_dispatch(n, lo_bit, nbits, re, im, beta):
     p = _pallas()
     if p["use"]:
         from repro.kernels import mixer as k
@@ -124,17 +167,63 @@ def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
     return ref.apply_mixer_bits(re, im, n, lo_bit, nbits, beta)
 
 
-def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
-    """One full intra-shard QAOA layer: cost phase, then the n-qubit mixer.
+def _neighbor_sum_bits(v, lo_bit: int, nbits: int):
+    """Σ over the group's qubits of v with that qubit flipped — the
+    ∂β generator contraction (each RX factor differentiates into −i·X on
+    its qubit). The reshape puts bit q on the middle axis; reversing it is
+    the flip. Metadata-only reshapes, one add per qubit."""
+    out = jnp.zeros_like(v)
+    for q in range(lo_bit, lo_bit + nbits):
+        out = out + v.reshape(-1, 2, 2**q)[:, ::-1, :].reshape(v.shape)
+    return out
 
-    This is the op the statevector engine (core/engine.py, DESIGN.md §2.6)
-    runs per layer on every path — flat or per-shard. On the Pallas path
-    the phase and the *first* mixer group go through the fused
-    `kernels/fused_layer.py` kernel (one VMEM round-trip, §Perf C3) and
-    the remaining groups through the mixer kernel; the XLA path is the
-    exact phase-then-mixer reference decomposition.
-    """
-    _note("apply_layer", re)
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _mixer_bits_vjp(n, lo_bit, nbits, re, im, beta):
+    return _mixer_bits_dispatch(n, lo_bit, nbits, re, im, beta)
+
+
+def _mixer_bits_fwd(n, lo_bit, nbits, re, im, beta):
+    ore, oim = _mixer_bits_dispatch(n, lo_bit, nbits, re, im, beta)
+    return (ore, oim), (ore, oim, beta)
+
+
+def _mixer_bits_bwd(n, lo_bit, nbits, res, cot):
+    ore, oim, beta = res
+    d_ore, d_oim = cot
+    # the group unitary's transpose is the group at −β: same kernel
+    g_re, g_im = _mixer_bits_dispatch(n, lo_bit, nbits, d_ore, d_oim, -beta)
+    # ∂out/∂β = neighbor-sum of the *output* planes rotated by i, so
+    # d_beta = Σ d_ore·N(oim) − d_oim·N(ore)
+    fr = _neighbor_sum_bits(ore, lo_bit, nbits)
+    fi = _neighbor_sum_bits(oim, lo_bit, nbits)
+    d_beta = jnp.sum(d_ore * fi) - jnp.sum(d_oim * fr)
+    return g_re, g_im, d_beta
+
+
+_mixer_bits_vjp.defvjp(_mixer_bits_fwd, _mixer_bits_bwd)
+
+
+def apply_mixer_bits(re, im, n: int, lo_bit: int, nbits: int, beta):
+    _note("apply_mixer_bits", re)
+    return _mixer_bits_vjp(n, lo_bit, nbits, re, im, _f32(beta))
+
+
+def apply_mixer(re, im, n: int, beta, group: int = 7):
+    """Full mixer as a chain of differentiable `apply_mixer_bits` groups —
+    the identical kernels fire, and the chain rule over the groups gives
+    the full-mixer gradient for free."""
+    _note("apply_mixer", re)
+    for g0 in range(0, n, group):
+        re, im = apply_mixer_bits(re, im, n, g0, min(group, n - g0), beta)
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# apply_layer — fused phase + full mixer, VJP = reversed layer at (−γ, −β)
+# ---------------------------------------------------------------------------
+
+def _layer_dispatch(n, group, re, im, cutv, gamma, beta):
     p = _pallas()
     if p["use"]:
         from repro.kernels import fused_layer as fl
@@ -162,14 +251,118 @@ def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
     return ref.apply_mixer(re, im, n, beta, group=group)
 
 
-def expectation(re, im, cutv):
-    _note("expectation", re)
+def _layer_adjoint_dispatch(n, group, re, im, cutv, gamma, beta):
+    """Transpose of `_layer_dispatch` applied to a cotangent: the trailing
+    mixer groups at −β in reverse order, then the fused kernel in
+    ``reverse`` mode (mixer group 0 before the phase) at (−γ, −β). Same
+    kernel shapes as the forward — the bwd trace compiles the same ops."""
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import fused_layer as fl
+        from repro.kernels import mixer as mk
+
+        k = min(group, n)
+        dk = 2**k
+        for g0 in reversed(range(k, n, group)):
+            re, im = mk.apply_mixer_bits(
+                re, im, n, g0, min(group, n - g0), -beta,
+                interpret=p["interpret"],
+            )
+        re_m, im_m = fl.fused_phase_mixer_group(
+            re.reshape(-1, dk),
+            im.reshape(-1, dk),
+            cutv.reshape(-1, dk),
+            -gamma,
+            -beta,
+            k,
+            reverse=True,
+            interpret=p["interpret"],
+        )
+        return re_m.reshape(-1), im_m.reshape(-1)
+    re, im = ref.apply_mixer(re, im, n, -beta, group=group)
+    return ref.apply_phase(re, im, cutv, -gamma)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _layer_vjp(n, group, re, im, cutv, gamma, beta):
+    return _layer_dispatch(n, group, re, im, cutv, gamma, beta)
+
+
+def _layer_fwd(n, group, re, im, cutv, gamma, beta):
+    ore, oim = _layer_dispatch(n, group, re, im, cutv, gamma, beta)
+    return (ore, oim), (re, im, cutv, gamma, beta, ore, oim)
+
+
+def _layer_bwd(n, group, res, cot):
+    re, im, cutv, gamma, beta, ore, oim = res
+    d_ore, d_oim = cot
+    # ∂β: the full n-qubit mixer acts last, so its generator contraction
+    # (neighbor-sum over *all* qubits) runs on the layer output
+    fr = _neighbor_sum_bits(ore, 0, n)
+    fi = _neighbor_sum_bits(oim, 0, n)
+    d_beta = jnp.sum(d_ore * fi) - jnp.sum(d_oim * fr)
+    # state cotangent through the whole layer: reversed layer at (−γ, −β)
+    g_re, g_im = _layer_adjoint_dispatch(n, group, d_ore, d_oim, cutv,
+                                         gamma, beta)
+    # ∂γ and ∂cutv fall out of the phase rule with (re, im) the layer
+    # *input* (the phase's input) and g the fully back-propagated cotangent
+    t = im * g_re - re * g_im
+    d_gamma = jnp.sum(cutv * t)
+    d_cutv = gamma * t
+    return g_re, g_im, d_cutv, d_gamma, d_beta
+
+
+_layer_vjp.defvjp(_layer_fwd, _layer_bwd)
+
+
+def apply_layer(re, im, cutv, gamma, beta, n: int, group: int = 7):
+    """One full intra-shard QAOA layer: cost phase, then the n-qubit mixer.
+
+    This is the op the statevector engine (core/engine.py, DESIGN.md §2.6)
+    runs per layer on every path — flat or per-shard. On the Pallas path
+    the phase and the *first* mixer group go through the fused
+    `kernels/fused_layer.py` kernel (one VMEM round-trip, §Perf C3) and
+    the remaining groups through the mixer kernel; the XLA path is the
+    exact phase-then-mixer reference decomposition. Differentiable under
+    every implementation via the analytic layer VJP (module docstring).
+    """
+    _note("apply_layer", re)
+    return _layer_vjp(n, group, re, im, cutv, _f32(gamma), _f32(beta))
+
+
+# ---------------------------------------------------------------------------
+# expectation — Σ|ψ|²·c, closed-form VJP
+# ---------------------------------------------------------------------------
+
+def _expectation_dispatch(re, im, cutv):
     p = _pallas()
     if p["use"]:
         from repro.kernels import phase as k
 
         return k.expectation(re, im, cutv, interpret=p["interpret"])
     return ref.expectation(re, im, cutv)
+
+
+@jax.custom_vjp
+def _expectation_vjp(re, im, cutv):
+    return _expectation_dispatch(re, im, cutv)
+
+
+def _expectation_fwd(re, im, cutv):
+    return _expectation_dispatch(re, im, cutv), (re, im, cutv)
+
+
+def _expectation_bwd(res, g):
+    re, im, cutv = res
+    return 2.0 * g * re * cutv, 2.0 * g * im * cutv, g * (re * re + im * im)
+
+
+_expectation_vjp.defvjp(_expectation_fwd, _expectation_bwd)
+
+
+def expectation(re, im, cutv):
+    _note("expectation", re)
+    return _expectation_vjp(re, im, cutv)
 
 
 def cut_batch_dense(spins, adjacency, total_weight):

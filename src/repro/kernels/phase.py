@@ -6,6 +6,11 @@ over XLA is fusing the sin/cos with both plane updates in one pass).
 
 `expectation`: Σ|psi|²·c — a tiled reduction using the sequential-grid
 accumulation idiom (out block revisited by every grid step).
+
+Block sizes resolve through `kernels.tuning` at trace time (autotuned per
+shape bucket when tuning is enabled; the hard defaults otherwise) and are
+threaded into the jitted launchers as static arguments, so a tuning-state
+change can never stale-hit a kernel-level jit cache.
 """
 
 from __future__ import annotations
@@ -15,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import tuning
 
 TILE = 8 * 1024  # elements per block (64 sublanes × 128 lanes)
 
@@ -29,11 +36,9 @@ def _phase_kernel(g_ref, re_ref, im_ref, c_ref, ore_ref, oim_ref):
     oim_ref[...] = im * c - re * s
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def apply_phase(re, im, cutv, gamma, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _apply_phase(re, im, cutv, gamma, *, tile: int, interpret: bool):
     dim = re.shape[0]
-    tile = min(TILE, dim)
-    assert dim % tile == 0, (dim, tile)
     g = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
     grid = (dim // tile,)
     spec = pl.BlockSpec((tile,), lambda i: (i,))
@@ -56,6 +61,12 @@ def apply_phase(re, im, cutv, gamma, *, interpret: bool = False):
     return ore, oim
 
 
+def apply_phase(re, im, cutv, gamma, *, interpret: bool = False):
+    dim = re.shape[0]
+    tile = tuning.clamp_tile(dim, tuning.param("apply_phase", dim, "tile", TILE))
+    return _apply_phase(re, im, cutv, gamma, tile=tile, interpret=interpret)
+
+
 def _exp_kernel(re_ref, im_ref, c_ref, out_ref):
     i = pl.program_id(0)
     re = re_ref[...]
@@ -72,11 +83,9 @@ def _exp_kernel(re_ref, im_ref, c_ref, out_ref):
         out_ref[0, 0] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def expectation(re, im, cutv, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _expectation(re, im, cutv, *, tile: int, interpret: bool):
     dim = re.shape[0]
-    tile = min(TILE, dim)
-    assert dim % tile == 0, (dim, tile)
     spec = pl.BlockSpec((tile,), lambda i: (i,))
     out = pl.pallas_call(
         _exp_kernel,
@@ -87,3 +96,9 @@ def expectation(re, im, cutv, *, interpret: bool = False):
         interpret=interpret,
     )(re, im, cutv)
     return out[0, 0]
+
+
+def expectation(re, im, cutv, *, interpret: bool = False):
+    dim = re.shape[0]
+    tile = tuning.clamp_tile(dim, tuning.param("expectation", dim, "tile", TILE))
+    return _expectation(re, im, cutv, tile=tile, interpret=interpret)

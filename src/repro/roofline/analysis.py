@@ -31,6 +31,33 @@ PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 
+# per-backend (peak_flops, memory_bandwidth) envelopes for single-kernel
+# bounds. The tpu row is the v5e chip above; the cpu row is a nominal
+# host envelope so the autotune harness's achieved-vs-peak column stays
+# defined on CPU/interpret sweeps — a scoreboard for relative tile
+# quality there, not silicon truth.
+KERNEL_PEAKS = {
+    "tpu": (PEAK_FLOPS, HBM_BW),
+    "cpu": (2.0e11, 5.0e10),
+}
+
+
+def kernel_bound_s(flops: float, bytes_accessed: float,
+                   backend: str = "tpu") -> float:
+    """Roofline lower bound for one kernel launch on `backend`:
+    max(compute-limited, memory-limited) seconds."""
+    pf, pb = KERNEL_PEAKS.get(backend, KERNEL_PEAKS["tpu"])
+    return max(flops / pf, bytes_accessed / pb)
+
+
+def achieved_fraction(flops: float, bytes_accessed: float, seconds: float,
+                      backend: str = "tpu") -> float:
+    """bound/measured — 1.0 means the launch hit the peak model; the
+    autotuner records this per (op, shape-bucket) candidate."""
+    if seconds <= 0.0:
+        return 0.0
+    return kernel_bound_s(flops, bytes_accessed, backend) / seconds
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,

@@ -1,0 +1,396 @@
+"""Gradient parity for the `kernels.ops` custom-vjp layer (DESIGN.md §2.7).
+
+The ops carry analytic vjp rules whose backward traces re-enter the same
+dispatched kernels with negated angles. Ground truth for every gradient is
+plain JAX autodiff through the pure-jnp `kernels.ref` oracles — NOT the
+ops layer under another impl (that would test the vjp rules against
+themselves). Forward values must stay bit-identical to the raw dispatch
+(the custom_vjp wrapper may not perturb primal numerics), and the tuning
+state must behave as honest cache-key material for cached program
+builders (zero rebuilds on warm re-run, distinct programs per state).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref, tuning
+
+ATOL = 2e-5
+
+
+def _state(n: int, seed: int = 0):
+    dim = 2**n
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    norm = jnp.sqrt(jnp.sum(re * re + im * im))
+    cutv = jax.random.uniform(k3, (dim,), jnp.float32) * n
+    return re / norm, im / norm, cutv
+
+
+def _rand_cotangents(n: int, seed: int = 1):
+    """Random linear functional over (ore, oim) so parity covers generic
+    cotangents, not just the all-ones direction."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w_re = jax.random.normal(k1, (2**n,), jnp.float32)
+    w_im = jax.random.normal(k2, (2**n,), jnp.float32)
+    return w_re, w_im
+
+
+def _assert_grads_close(got, want, atol=ATOL):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-op parity vs ref autodiff
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 6, 9])
+def test_apply_phase_grads_match_ref_autodiff(n):
+    re, im, cutv = _state(n)
+    w_re, w_im = _rand_cotangents(n)
+
+    def loss_ops(re, im, cutv, gamma):
+        ore, oim = ops.apply_phase(re, im, cutv, gamma)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    def loss_ref(re, im, cutv, gamma):
+        ore, oim = ref.apply_phase(re, im, cutv, gamma)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    argnums = (0, 1, 2, 3)
+    want = jax.grad(loss_ref, argnums)(re, im, cutv, 0.37)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(loss_ops, argnums)(re, im, cutv, jnp.float32(0.37))
+    _assert_grads_close(got, want)
+
+
+@pytest.mark.parametrize(
+    "n,lo,k",
+    [
+        (5, 0, 3),  # trailing-axis matmul path (y == 1)
+        (6, 0, 6),  # whole-register group
+        (7, 2, 3),  # strided mid-state path (x > 1, y > 1)
+        (8, 5, 3),  # leading bits (x == 1, y > 1)
+    ],
+)
+def test_apply_mixer_bits_grads_match_ref_autodiff(n, lo, k):
+    re, im, _ = _state(n)
+    w_re, w_im = _rand_cotangents(n)
+
+    def loss_ops(re, im, beta):
+        ore, oim = ops.apply_mixer_bits(re, im, n, lo, k, beta)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    def loss_ref(re, im, beta):
+        ore, oim = ref.apply_mixer_bits(re, im, n, lo, k, beta)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    argnums = (0, 1, 2)
+    want = jax.grad(loss_ref, argnums)(re, im, 0.61)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(loss_ops, argnums)(re, im, jnp.float32(0.61))
+    _assert_grads_close(got, want)
+
+
+@pytest.mark.parametrize("n,group", [(4, 7), (6, 3), (6, 7)])
+def test_apply_layer_grads_match_ref_autodiff(n, group):
+    re, im, cutv = _state(n)
+    w_re, w_im = _rand_cotangents(n)
+
+    def loss_ops(re, im, cutv, gamma, beta):
+        ore, oim = ops.apply_layer(re, im, cutv, gamma, beta, n, group=group)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    def loss_ref(re, im, cutv, gamma, beta):
+        pre, pim = ref.apply_phase(re, im, cutv, gamma)
+        ore, oim = ref.apply_mixer(pre, pim, n, beta, group=group)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    argnums = (0, 1, 2, 3, 4)
+    want = jax.grad(loss_ref, argnums)(re, im, cutv, 0.37, 0.61)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(loss_ops, argnums)(
+            re, im, cutv, jnp.float32(0.37), jnp.float32(0.61)
+        )
+    _assert_grads_close(got, want)
+
+
+def test_apply_layer_grads_match_ref_under_xla_dispatch():
+    """The vjp rules are impl-agnostic: the xla dispatch path runs the
+    same analytic bwd (via ref kernels) and must agree with autodiff."""
+    n, group = 6, 3
+    re, im, cutv = _state(n)
+    w_re, w_im = _rand_cotangents(n)
+
+    def loss_ops(gamma, beta):
+        ore, oim = ops.apply_layer(re, im, cutv, gamma, beta, n, group=group)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    def loss_ref(gamma, beta):
+        pre, pim = ref.apply_phase(re, im, cutv, gamma)
+        ore, oim = ref.apply_mixer(pre, pim, n, beta, group=group)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    want = jax.grad(loss_ref, (0, 1))(0.37, 0.61)
+    with ops.using_implementation("xla"):
+        got = jax.grad(loss_ops, (0, 1))(jnp.float32(0.37), jnp.float32(0.61))
+    _assert_grads_close(got, want)
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_expectation_grads_match_ref_autodiff(n):
+    re, im, cutv = _state(n)
+    want = jax.grad(ref.expectation, (0, 1, 2))(re, im, cutv)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(ops.expectation, (0, 1, 2))(re, im, cutv)
+    _assert_grads_close(got, want)
+
+
+@given(gamma=st.floats(-2.0, 2.0), beta=st.floats(-2.0, 2.0),
+       seed=st.integers(0, 64))
+@settings(max_examples=25, deadline=None)
+def test_layer_angle_grads_property(gamma, beta, seed):
+    """Property sweep over angles: d⟨loss⟩/d(γ,β) through the custom vjp
+    matches ref autodiff for arbitrary angle values and states."""
+    n = 5
+    re, im, cutv = _state(n, seed=seed)
+    w_re, w_im = _rand_cotangents(n, seed=seed + 1)
+
+    def loss_ops(g, b):
+        ore, oim = ops.apply_layer(re, im, cutv, g, b, n, group=7)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    def loss_ref(g, b):
+        pre, pim = ref.apply_phase(re, im, cutv, g)
+        ore, oim = ref.apply_mixer(pre, pim, n, b, group=7)
+        return jnp.sum(w_re * ore) + jnp.sum(w_im * oim)
+
+    want = jax.grad(loss_ref, (0, 1))(gamma, beta)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(loss_ops, (0, 1))(
+            jnp.float32(gamma), jnp.float32(beta)
+        )
+    _assert_grads_close(got, want, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the ascent's gradient runs under the active implementation
+# ---------------------------------------------------------------------------
+
+
+def _ref_qaoa_expectation(params, cutv, n):
+    gammas, betas = params
+    dim = 2**n
+    amp = jnp.float32(1.0 / np.sqrt(dim))
+    re = jnp.full((dim,), amp)
+    im = jnp.zeros((dim,), jnp.float32)
+    for g, b in zip(gammas, betas):
+        re, im = ref.apply_phase(re, im, cutv, g)
+        re, im = ref.apply_mixer(re, im, n, b, group=7)
+    return ref.expectation(re, im, cutv)
+
+
+def test_qaoa_expectation_grads_match_ref_end_to_end():
+    from repro.core.qaoa import qaoa_expectation
+
+    n, p = 5, 3
+    _, _, cutv = _state(n)
+    gammas = jnp.linspace(0.1, 0.5, p).astype(jnp.float32)
+    betas = jnp.linspace(0.6, 0.2, p).astype(jnp.float32)
+
+    want = jax.grad(_ref_qaoa_expectation)((gammas, betas), cutv, n)
+    with ops.using_implementation("pallas_interpret"):
+        got = jax.grad(qaoa_expectation)((gammas, betas), cutv, n)
+    _assert_grads_close(got, want, atol=5e-5)
+
+
+def test_optimize_params_gradient_trace_fires_pallas_kernels():
+    """The de-pin proof: `optimize_params` (and therefore the ascent) no
+    longer forces the xla reference path for gradients — under
+    pallas_interpret the differentiated evolution launches the fused
+    Pallas kernel on both the forward and the backward trace."""
+    import repro.kernels.fused_layer as fused_mod
+    from repro.core import qaoa as qaoa_mod
+
+    calls = {"fwd": 0, "rev": 0}
+    orig = fused_mod.fused_phase_mixer_group
+
+    def spy(*a, **k):
+        calls["rev" if k.get("reverse") else "fwd"] += 1
+        return orig(*a, **k)
+
+    fused_mod.fused_phase_mixer_group = spy
+    try:
+        n = 5
+        _, _, cutv = _state(n)
+        cfg = qaoa_mod.QAOAConfig(n_qubits=n, p_layers=2, opt_steps=3)
+        with ops.using_implementation("pallas_interpret"):
+            gammas, betas = qaoa_mod.optimize_params(cutv, n, cfg)
+    finally:
+        fused_mod.fused_phase_mixer_group = orig
+
+    assert calls["fwd"] > 0, "forward trace never reached the fused kernel"
+    assert calls["rev"] > 0, "backward trace never reached the fused kernel"
+    assert np.all(np.isfinite(np.asarray(gammas)))
+    assert np.all(np.isfinite(np.asarray(betas)))
+
+
+def test_optimize_params_agrees_across_implementations():
+    from repro.core import qaoa as qaoa_mod
+
+    n = 5
+    _, _, cutv = _state(n)
+    cfg = qaoa_mod.QAOAConfig(n_qubits=n, p_layers=2, opt_steps=4)
+    with ops.using_implementation("xla"):
+        g_x, b_x = qaoa_mod.optimize_params(cutv, n, cfg)
+    with ops.using_implementation("pallas_interpret"):
+        g_i, b_i = qaoa_mod.optimize_params(cutv, n, cfg)
+    np.testing.assert_allclose(np.asarray(g_i), np.asarray(g_x), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(b_i), np.asarray(b_x), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# forward bit-parity: the vjp wrapper may not perturb primal numerics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_forward_values_bit_identical_through_vjp_wrapper(impl):
+    n = 6
+    re, im, cutv = _state(n)
+    g, b = jnp.float32(0.37), jnp.float32(0.61)
+    with ops.using_implementation(impl):
+        pairs = [
+            (ops.apply_phase(re, im, cutv, g),
+             ops._phase_dispatch(re, im, cutv, g)),
+            (ops.apply_mixer_bits(re, im, n, 2, 3, b),
+             ops._mixer_bits_dispatch(n, 2, 3, re, im, b)),
+            (ops.apply_layer(re, im, cutv, g, b, n, group=3),
+             ops._layer_dispatch(n, 3, re, im, cutv, g, b)),
+            ((ops.expectation(re, im, cutv),),
+             (ops._expectation_dispatch(re, im, cutv),)),
+        ]
+    for got, want in pairs:
+        for a, bb in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+# ---------------------------------------------------------------------------
+# tuning state: resolution, round-trip, committed cache validity
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_helpers():
+    assert tuning.round_up(5, 4) == 8
+    assert tuning.round_up(8, 4) == 8
+    assert tuning.clamp_tile(256, 1024) == 256
+    assert tuning.clamp_tile(1024, 256) == 256
+    assert tuning.pad_chunks(5, 8) == 8
+    assert tuning.pad_chunks(100, 8) == 104
+    assert tuning.pad_and_tile(100, 64) == (128, 64)
+    assert tuning.shape_bucket(1024) == "2^10"
+    assert tuning.shape_bucket(1000) == "2^10"
+    assert tuning.shape_bucket(1025) == "2^11"
+
+
+def test_tuning_param_resolution_and_state_roundtrip():
+    key = tuning.cache_key("apply_phase", 4096)
+    assert tuning.param("apply_phase", 4096, "tile", 512) == 512  # disabled
+    with tuning.using_overrides({key: {"tile": 2048}}):
+        assert tuning.param("apply_phase", 4096, "tile", 512) == 2048
+        st_on = tuning.state()
+    assert tuning.state() == ("off",)
+    assert st_on[0] == "on"
+    with tuning.using_state(st_on):
+        assert tuning.param("apply_phase", 4096, "tile", 512) == 2048
+        assert tuning.state() == st_on
+    assert tuning.param("apply_phase", 4096, "tile", 512) == 512
+
+
+def test_committed_tuning_cache_is_valid():
+    path = tuning.CACHE_PATH
+    assert os.path.exists(path), "committed tuning cache missing"
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["version"] == 1
+    entries = payload["entries"]
+    assert entries, "tuning cache has no entries"
+    for key, cfg in entries.items():
+        op, bucket, backend = key.split("|")
+        assert op in tuning.TUNABLE_OPS, key
+        assert bucket.startswith("2^"), key
+        assert backend, key
+        allowed = set(tuning.TUNABLE_OPS[op])
+        assert set(cfg) <= allowed, (key, cfg)
+        for name, val in cfg.items():
+            assert isinstance(val, int) and val >= 1, (key, name, val)
+
+
+def test_tuned_tiles_preserve_kernel_numerics():
+    """Tile overrides change the launch geometry, never the math: an
+    elementwise op stays bit-identical, reductions stay allclose."""
+    n = 6
+    re, im, cutv = _state(n)
+    dim = 2**n
+    base_phase = ops.apply_phase(re, im, cutv, jnp.float32(0.37))
+    base_exp = ops.expectation(re, im, cutv)
+    overrides = {
+        tuning.cache_key("apply_phase", dim): {"tile": 8},
+        tuning.cache_key("expectation", dim): {"tile": 16},
+    }
+    with ops.using_implementation("pallas_interpret"), \
+            tuning.using_overrides(overrides):
+        tuned_phase = ops.apply_phase(re, im, cutv, jnp.float32(0.37))
+        tuned_exp = ops.expectation(re, im, cutv)
+    for a, b in zip(tuned_phase, base_phase):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(
+        float(tuned_exp), float(base_exp), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compile ledger: tuning state is real cache-key material
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_state_keys_cached_programs_and_warm_rerun_is_free():
+    from repro.core import qaoa as qaoa_mod
+    from repro.obs.ledger import get_ledger
+
+    cfg = qaoa_mod.QAOAConfig(n_qubits=4, p_layers=1, opt_steps=2)
+    off = tuning.state()
+    with tuning.using_overrides(
+            {tuning.cache_key("apply_phase", 16): {"tile": 8}}):
+        on = tuning.state()
+    assert on != off
+
+    led = get_ledger()
+    led.reset()
+    p_off = qaoa_mod._solve_subgraph_batch_program(cfg, "pallas_interpret",
+                                                   off)
+    p_on = qaoa_mod._solve_subgraph_batch_program(cfg, "pallas_interpret", on)
+    assert p_off is not p_on, "tuning state must key the program cache"
+    assert led.count("build") == 2
+    assert any(repr(on) in e.key for e in led.builds), (
+        "tuning state must be visible in the ledger's build keys")
+
+    # warm re-run: same cfg/impl/state → zero rebuilds, zero compiles
+    led.reset()
+    assert qaoa_mod._solve_subgraph_batch_program(
+        cfg, "pallas_interpret", off) is p_off
+    assert qaoa_mod._solve_subgraph_batch_program(
+        cfg, "pallas_interpret", on) is p_on
+    assert led.count("build") == 0
+    assert led.count("compile") == 0

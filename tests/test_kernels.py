@@ -207,6 +207,24 @@ def test_mixer_bits_kernel_matches_ref(n, lo, k):
     np.testing.assert_allclose(np.asarray(gi), np.asarray(wi), atol=2e-5)
 
 
+@pytest.mark.parametrize("n,lo,k", [(8, 2, 3), (9, 4, 5), (10, 3, 7)])
+def test_mixer_bits_relayout_path_matches_strided(n, lo, k):
+    # the legacy moveaxis path (kept as the §Perf C11 bench baseline)
+    # and the fused strided-BlockSpec kernel are the same group unitary
+    key = jax.random.PRNGKey(n * 10 + k)
+    k1, k2 = jax.random.split(key)
+    dim = 2**n
+    re = jax.random.normal(k1, (dim,), jnp.float32)
+    im = jax.random.normal(k2, (dim,), jnp.float32)
+    beta = jnp.float32(0.7)
+    sr, si = mixer.apply_mixer_bits(re, im, n, lo, k, beta, interpret=True)
+    rr, ri = mixer.apply_mixer_bits_relayout(
+        re, im, n, lo, k, beta, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(sr), np.asarray(rr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(si), np.asarray(ri), atol=2e-5)
+
+
 def test_mixer_bits_composition_is_full_mixer():
     # chaining apply_mixer_bits over all groups == apply_mixer (ref oracle)
     n, group = 9, 4
@@ -280,6 +298,7 @@ def test_batch_program_cache_keys_on_implementation():
     from repro.core import qaoa as qaoa_mod
     from repro.core.partition import partition_for_solver
     from repro.kernels import ops
+    from repro.kernels import tuning
 
     qcfg = qaoa_mod.QAOAConfig(n_qubits=6, p_layers=2, opt_steps=4, top_k=2)
     g = _graph(16, 0.4, seed=21)
@@ -356,16 +375,20 @@ def test_solve_pool_program_cache_keys_on_implementation():
     from repro.core import qaoa as qaoa_mod
     from repro.core.partition import partition_for_solver
     from repro.kernels import ops
+    from repro.kernels import tuning
 
     qcfg = qaoa_mod.QAOAConfig(n_qubits=6, p_layers=2, opt_steps=4, top_k=2)
     mesh = compat.make_mesh((1,), ("data",))
     donate = compat.supports_donation()
-    p_x = dist._solve_pool_program(qcfg, mesh, ("data",), donate, "xla")
+    off = tuning.state()
+    p_x = dist._solve_pool_program(qcfg, mesh, ("data",), donate, "xla", off)
     p_i = dist._solve_pool_program(
-        qcfg, mesh, ("data",), donate, "pallas_interpret"
+        qcfg, mesh, ("data",), donate, "pallas_interpret", off
     )
     assert p_x is not p_i
-    assert dist._solve_pool_program(qcfg, mesh, ("data",), donate, "xla") is p_x
+    assert dist._solve_pool_program(
+        qcfg, mesh, ("data",), donate, "xla", off
+    ) is p_x
 
     g = _graph(16, 0.4, seed=23)
     part = partition_for_solver(g, 6)

@@ -104,6 +104,53 @@ def test_cache_key_flags_trace_time_global_read():
     assert _rules_of(rep) == ["cache-key"]
 
 
+_TUNE_STATE_GLOBAL_READ = """
+import functools
+from repro.kernels import ops
+from repro.kernels import tuning
+
+@functools.lru_cache(maxsize=8)
+def build(n: int, impl: str):
+    def run(x):
+        with ops.using_implementation(impl), \\
+                tuning.using_state(tuning.state()):
+            return ops.apply_phase(x, x, None, 0.1)
+    return run
+"""
+
+_TUNE_STATE_KEYED = """
+import functools
+from repro.kernels import ops
+from repro.kernels import tuning
+
+@functools.lru_cache(maxsize=8)
+def build(n: int, impl: str, tune: tuple):
+    def run(x):
+        with ops.using_implementation(impl), tuning.using_state(tune):
+            return ops.apply_phase(x, x, None, 0.1)
+    return run
+"""
+
+
+def test_cache_key_flags_trace_time_tuning_state_read():
+    # tuning.using_state(tuning.state()) inside a cached builder is the
+    # same cache-blindness bug as the get_implementation() re-read: the
+    # block-shape table the body traces against never reaches the lru key
+    rep = run_on_sources(
+        {"src/repro/core/snippet.py": _TUNE_STATE_GLOBAL_READ},
+        rules=["cache-key"],
+    )
+    assert _rules_of(rep) == ["cache-key"]
+    assert "tuning.using_state()" in rep.findings[0].message
+
+
+def test_cache_key_accepts_param_tuning_state():
+    rep = run_on_sources(
+        {"src/repro/core/snippet.py": _TUNE_STATE_KEYED}, rules=["cache-key"]
+    )
+    assert rep.findings == []
+
+
 def test_cache_key_regression_solve_pool_program():
     """Acceptance criterion: stripping the PR 5 fix (the `impl` re-assert
     inside the cached pool/statevector builders) out of the *real*
@@ -120,7 +167,9 @@ def test_cache_key_regression_solve_pool_program():
 
     dist_src = sources["src/repro/core/distributed.py"]
     degraded, n_subs = re.subn(
-        r"with ops\.using_implementation\(impl\):", "if True:", dist_src
+        r"with ops\.using_implementation\(impl\)"
+        r"(?:, tuning\.using_state\(tune\))?:",
+        "if True:", dist_src,
     )
     assert n_subs >= 2, "expected the keyed builders in distributed.py"
     sources["src/repro/core/distributed.py"] = degraded
@@ -373,6 +422,26 @@ def test_nondeterminism_obs_clock_module_is_the_sanctioned_boundary():
     # module elsewhere may still read perf_counter freely
     rep = run_on_sources(
         {"src/repro/service/solver_api.py": _OBS_BAD},
+        rules=["hot-nondeterminism"],
+    )
+    assert rep.findings == []
+
+
+def test_nondeterminism_measurement_path_bans_all_clock_reads():
+    # the autotune timing helper (repro.kernels.tuning) is held to the
+    # obs-package contract: its timings feed the committed tuning cache,
+    # so sweeps must be replayable through the injectable clock — direct
+    # time.* reads (even monotonic ones) are banned (DESIGN.md §2.7)
+    path = "src/repro/kernels/tuning.py"
+    rep = run_on_sources({path: _OBS_BAD}, rules=["hot-nondeterminism"])
+    assert len(rep.findings) == 1, [f.render() for f in rep.findings]
+    assert "measurement-path" in rep.findings[0].message
+    assert "injectable clock" in rep.findings[0].message
+    rep = run_on_sources({path: _OBS_CLEAN}, rules=["hot-nondeterminism"])
+    assert rep.findings == []
+    # the guard is that one module, not the whole kernels package
+    rep = run_on_sources(
+        {"src/repro/kernels/snippet.py": _OBS_BAD},
         rules=["hot-nondeterminism"],
     )
     assert rep.findings == []
