@@ -12,7 +12,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, Problem, as_problem
 from repro.core.pei import SolveReport
 from repro.kernels import ops
 
@@ -41,6 +41,51 @@ def brute_force_maxcut(graph: Graph, chunk_qubits: int = 22):
             best_val = v
             best_idx = start + j
     bits = ((np.int64(best_idx) << 1) >> np.arange(n)) & 1
+    t1 = time.perf_counter()
+    report = SolveReport(
+        method="brute_force", n_vertices=n, cut_value=best_val, runtime_s=t1 - t0
+    )
+    return bits.astype(np.int8), best_val, report
+
+
+def brute_force_problem(problem: Graph | Problem, chunk_qubits: int = 22):
+    """Exact maximizer of a full `Problem` objective (quadratic + linear +
+    offset) by exhaustive enumeration.
+
+    Unlike `brute_force_maxcut` this enumerates *all* 2^n assignments: the
+    bit0 = 0 symmetry it exploits holds only for pure cuts — a nonzero
+    linear term breaks the global flip invariance. Returns
+    (assignment (n,) int8, objective value float, SolveReport).
+    """
+    prob = as_problem(problem)
+    graph = prob.graph
+    n = graph.n
+    if n > 26:
+        raise ValueError(f"brute force infeasible for n={n}")
+    t0 = time.perf_counter()
+    edges = graph.edges
+    weights = graph.weights
+    lin = jnp.asarray(prob.linear, dtype=jnp.float32)
+    best_val = -np.inf
+    best_idx = 0
+    total = 1 << n
+    step = 1 << min(chunk_qubits, n)
+    vbits = jnp.arange(n, dtype=jnp.int32)
+    for start in range(0, total, step):
+        m = min(step, total - start)
+        idx = jnp.arange(start, start + m, dtype=jnp.int32)
+        s0 = (idx[:, None] >> edges[None, :, 0]) & 1
+        s1 = (idx[:, None] >> edges[None, :, 1]) & 1
+        vals = (s0 ^ s1).astype(jnp.float32) @ weights
+        xbits = ((idx[:, None] >> vbits[None, :]) & 1).astype(jnp.float32)
+        vals = vals + xbits @ lin
+        j = int(jnp.argmax(vals))
+        v = float(vals[j])
+        if v > best_val:
+            best_val = v
+            best_idx = start + j
+    bits = (np.int64(best_idx) >> np.arange(n)) & 1
+    best_val += float(prob.offset)
     t1 = time.perf_counter()
     report = SolveReport(
         method="brute_force", n_vertices=n, cut_value=best_val, runtime_s=t1 - t0

@@ -24,8 +24,14 @@ from repro.core.graph import Graph, cut_value
 from repro.core.pei import SolveReport
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _sweeps(edges, weights, assignment, steps: int, n: int):
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def _sweeps(edges, weights, linear, assignment, steps: int, n: int):
+    # Acceptance threshold is *relative* to the objective scale: the old
+    # absolute 1e-6 silently rejected every real improvement on graphs with
+    # uniformly tiny weights (and accepted float noise on huge ones).
+    scale = jnp.sum(jnp.abs(weights)) + jnp.sum(jnp.abs(linear))
+    eps = 1e-6 * scale
+
     def gains(s):
         su = s[edges[:, 0]]
         sv = s[edges[:, 1]]
@@ -37,43 +43,65 @@ def _sweeps(edges, weights, assignment, steps: int, n: int):
         deg = jnp.zeros((n,), weights.dtype)
         deg = deg.at[edges[:, 0]].add(weights)
         deg = deg.at[edges[:, 1]].add(weights)
-        return deg - 2.0 * inc  # gain of flipping each vertex alone
+        quad = deg - 2.0 * inc  # gain of flipping each vertex alone
+        # flipping v changes the linear term by h_v * (1 - 2 s_v)
+        return quad + linear * (1.0 - 2.0 * s.astype(weights.dtype))
 
-    def body(carry, _):
-        s, cut = carry
+    def body(s, _):
         g = gains(s)
         v = jnp.argmax(g)
-        improve = g[v] > 1e-6
+        improve = g[v] > eps
         s = jnp.where(
             jnp.arange(n) == v, jnp.where(improve, 1 - s[v], s[v]), s
         ).astype(s.dtype)
-        cut = cut + jnp.where(improve, g[v], 0.0)
-        return (s, cut), None
+        return s, None
 
-    su = assignment[edges[:, 0]]
-    sv = assignment[edges[:, 1]]
-    cut0 = jnp.sum(weights * (su ^ sv).astype(weights.dtype))
-    (s, cut), _ = jax.lax.scan(body, (assignment, cut0), None, length=steps)
-    return s, cut
+    s, _ = jax.lax.scan(body, assignment, None, length=steps)
+    return s
 
 
-def refine(graph: Graph, assignment: np.ndarray, steps: int):
-    """Best-improvement 1-flip refinement of an existing assignment."""
+def _score(graph: Graph, s: np.ndarray, linear) -> float:
+    """From-scratch objective of a final assignment. The scan used to carry
+    a running score updated by +g[v] per flip; in float32 that carry drifts
+    from the true value over hundreds of sweeps on weighted instances, so
+    every caller now re-scores the *assignment* instead."""
+    val = float(cut_value(graph, jnp.asarray(s)))
+    if linear is not None:
+        lin = np.asarray(linear, dtype=np.float64)
+        val += float(lin @ np.asarray(s, dtype=np.float64))
+    return val
+
+
+def refine(graph: Graph, assignment: np.ndarray, steps: int, linear=None):
+    """Best-improvement 1-flip refinement of an existing assignment.
+
+    ``linear`` (n,) f32, optional, refines the full internal objective
+    (quadratic cut + per-vertex linear terms) for QUBO/MIS problems.
+    """
     s = jnp.asarray(assignment, dtype=jnp.int32)
-    s, cut = _sweeps(graph.edges, graph.weights, s, steps, graph.n)
-    return np.asarray(s, dtype=np.int8), float(cut)
+    lin = (
+        jnp.zeros((graph.n,), dtype=jnp.float32)
+        if linear is None
+        else jnp.asarray(linear, dtype=jnp.float32)
+    )
+    s = _sweeps(graph.edges, graph.weights, lin, s, steps, graph.n)
+    out = np.asarray(s, dtype=np.int8)
+    return out, _score(graph, out, linear)
 
 
 def local_search(graph: Graph, restarts: int = 8, steps: int = 200, seed: int = 0):
     """Random-restart 1-flip local search baseline."""
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
-    best_s, best_v = None, -1.0
+    zeros = jnp.zeros((graph.n,), dtype=jnp.float32)
+    best_s, best_v = None, -np.inf
     for _ in range(restarts):
         s0 = rng.integers(0, 2, size=graph.n).astype(np.int32)
-        s, v = _sweeps(graph.edges, graph.weights, jnp.asarray(s0), steps, graph.n)
-        if float(v) > best_v:
-            best_v, best_s = float(v), np.asarray(s, dtype=np.int8)
+        s = _sweeps(graph.edges, graph.weights, zeros, jnp.asarray(s0), steps, graph.n)
+        s = np.asarray(s, dtype=np.int8)
+        v = _score(graph, s, None)
+        if v > best_v:
+            best_v, best_s = v, s
     t1 = time.perf_counter()
     report = SolveReport(
         method="local_search",

@@ -64,6 +64,7 @@ def _solve_pool_program(
     cfg: qaoa_mod.QAOAConfig, mesh: Mesh, axes: tuple, donate: bool,
     impl: str,
     tune: tuple,
+    has_lin: bool = False,
 ):
     # the per-shard `kernels.ops` dispatch is a trace-time choice, so
     # `ops.using_implementation` only reaches the pool if each
@@ -71,30 +72,47 @@ def _solve_pool_program(
     # re-asserted during tracing because jit traces lazily on first call,
     # possibly outside the context the program was requested under. The
     # `kernels.tuning` block-shape state is trace-time in the same way,
-    # so it is keyed and re-asserted alongside (DESIGN.md §2.7)
+    # so it is keyed and re-asserted alongside (DESIGN.md §2.7). `has_lin`
+    # keys the linear-terms (QUBO/MIS) variant; False compiles the exact
+    # Max-Cut program, keeping that path bit-identical.
     spec = P(axes)
 
-    def run(e, w, mk):
-        with ops.using_implementation(impl), tuning.using_state(tune):
-            return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
+    if has_lin:
+
+        def run(e, w, mk, l):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return qaoa_mod.solve_subgraph_batch_linear(e, w, mk, cfg, l)
+
+        in_specs = (spec, spec, spec, spec)
+        donate_args = (0, 1, 2, 3)
+    else:
+
+        def run(e, w, mk):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return qaoa_mod.solve_subgraph_batch(e, w, mk, cfg)
+
+        in_specs = (spec, spec, spec)
+        donate_args = (0, 1, 2)
 
     sharded = compat.shard_map(
         run,
         mesh,
-        in_specs=(spec, spec, spec),
+        in_specs=in_specs,
         out_specs=qaoa_mod.QAOAResult(spec, spec, spec, spec, spec),
     )
     # donate only when solve_pool owns the (freshly padded) batch arrays —
     # donating caller-owned arrays would invalidate them behind its back
-    return compat.jit(sharded, donate_argnums=(0, 1, 2) if donate else ())
+    return compat.jit(sharded, donate_argnums=donate_args if donate else ())
 
 
 def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
-               axes=("data",)):
+               axes=("data",), linears=None):
     """Batched QAOA across the mesh: round-robin subgraphs over devices.
 
     Pads the batch to a multiple of the axis size (padding entries are
-    empty graphs) and strips the padding on return.
+    empty graphs) and strips the padding on return. ``linears``
+    (B, n_qubits) f32, optional, carries per-vertex diagonal terms
+    (QUBO/MIS buckets); ``None`` runs the unchanged Max-Cut program.
     """
     axes = tuple(axes)
     total = int(np.prod([mesh.shape[a] for a in axes]))
@@ -109,14 +127,20 @@ def solve_pool(edges, weights, masks, cfg: qaoa_mod.QAOAConfig, mesh: Mesh,
             [weights, jnp.zeros((pad,) + weights.shape[1:], weights.dtype)]
         )
         masks = jnp.concatenate([masks, jnp.ones((pad,), masks.dtype)])
+        if linears is not None:
+            linears = jnp.concatenate(
+                [linears, jnp.zeros((pad,) + linears.shape[1:], linears.dtype)]
+            )
 
     # normalize the cache key on non-donating backends: donate=True and
     # donate=False would otherwise compile byte-identical programs twice
     donate = bool(pad) and compat.supports_donation()
     program = _solve_pool_program(
-        cfg, mesh, axes, donate, ops.get_implementation(), tuning.state()
+        cfg, mesh, axes, donate, ops.get_implementation(), tuning.state(),
+        linears is not None,
     )
-    res = program(edges, weights, masks)
+    res = (program(edges, weights, masks) if linears is None
+           else program(edges, weights, masks, linears))
     return jax.tree.map(lambda x: x[:m], res)
 
 
@@ -145,6 +169,7 @@ def _sharded_qaoa_program(
     learning_rate: float,
     impl: str,
     tune: tuple,
+    has_lin: bool = False,
 ):
     """Cached sharded-statevector program over the shared engine.
 
@@ -170,8 +195,8 @@ def _sharded_qaoa_program(
         group=group,
     )
 
-    def one(edges, weights, gammas, betas):
-        cut = engine.cut_table(layout, edges, weights)
+    def one(edges, weights, gammas, betas, linear=None):
+        cut = engine.cut_table(layout, edges, weights, linear)
         if opt_steps:
             gammas, betas = engine.sharded_ascent(
                 layout, cut, gammas, betas, opt_steps, learning_rate
@@ -183,6 +208,16 @@ def _sharded_qaoa_program(
 
     if batch == 1:
         local_run = one
+    elif has_lin:
+
+        def local_run(edges, weights, gammas, betas, linears):
+            def body(_, ewl):
+                e, w, l = ewl
+                return 0, one(e, w, gammas, betas, l)
+
+            _, res = jax.lax.scan(body, 0, (edges, weights, linears))
+            return res
+
     else:
 
         def local_run(edges, weights, gammas, betas):
@@ -193,14 +228,25 @@ def _sharded_qaoa_program(
             _, res = jax.lax.scan(body, 0, (edges, weights))
             return res
 
-    def local_run_impl(edges, weights, gammas, betas):
-        with ops.using_implementation(impl), tuning.using_state(tune):
-            return local_run(edges, weights, gammas, betas)
+    if has_lin:
+
+        def local_run_impl(edges, weights, gammas, betas, linears):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return local_run(edges, weights, gammas, betas, linears)
+
+        in_specs = (P(), P(), P(), P(), P())
+    else:
+
+        def local_run_impl(edges, weights, gammas, betas):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return local_run(edges, weights, gammas, betas)
+
+        in_specs = (P(), P(), P(), P())
 
     run = compat.shard_map(
         local_run_impl,
         mesh,
-        in_specs=(P(), P(), P(), P()),
+        in_specs=in_specs,
         out_specs=ShardedQAOAResult(P(), P(), P(), P(), P()),
     )
     return compat.jit(run)
@@ -219,6 +265,7 @@ def sharded_qaoa(
     group: int = 7,
     opt_steps: int = 0,
     learning_rate: float = 0.05,
+    linear=None,
 ):
     """One n-qubit QAOA circuit with amplitudes sharded over `axis`.
 
@@ -237,9 +284,11 @@ def sharded_qaoa(
     program = _sharded_qaoa_program(
         n, int(gammas.shape[0]), 1, mesh, axis, top_k, schedule, group,
         int(opt_steps), float(learning_rate), ops.get_implementation(),
-        tuning.state(),
+        tuning.state(), linear is not None,
     )
-    return program(edges, weights, gammas, betas)
+    if linear is None:
+        return program(edges, weights, gammas, betas)
+    return program(edges, weights, gammas, betas, linear)
 
 
 def sharded_qaoa_batch(
@@ -255,12 +304,14 @@ def sharded_qaoa_batch(
     group: int = 7,
     opt_steps: int = 0,
     learning_rate: float = 0.05,
+    linears=None,
 ):
     """`sharded_qaoa` over a stacked batch of same-n subgraphs.
 
     ``edges`` (B, E_pad, 2) / ``weights`` (B, E_pad) padded with
     zero-weight rows (exact no-ops for the cut values); one cached
     program `lax.scan`s the B subgraphs through the sharded engine.
+    ``linears`` (B, n) f32, optional per-vertex diagonal terms.
     Result fields carry a leading (B,) axis.
     """
     b = int(edges.shape[0])
@@ -269,14 +320,17 @@ def sharded_qaoa_batch(
             edges[0], weights[0], n, gammas, betas, mesh, axis=axis,
             top_k=top_k, schedule=schedule, group=group,
             opt_steps=opt_steps, learning_rate=learning_rate,
+            linear=None if linears is None else linears[0],
         )
         return jax.tree.map(lambda x: jnp.asarray(x)[None], res)
     program = _sharded_qaoa_program(
         n, int(gammas.shape[0]), b, mesh, axis, top_k, schedule, group,
         int(opt_steps), float(learning_rate), ops.get_implementation(),
-        tuning.state(),
+        tuning.state(), linears is not None,
     )
-    return program(edges, weights, gammas, betas)
+    if linears is None:
+        return program(edges, weights, gammas, betas)
+    return program(edges, weights, gammas, betas, linears)
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +346,7 @@ def _merge_sharded_program(
 ):
     d_ax = mesh.shape[axis]
 
-    def local_run(lo, cand_bits, edge_u, edge_v, edge_w):
+    def local_run(lo, cand_bits, edge_u, edge_v, edge_w, lin):
         me = jax.lax.axis_index(axis)
         local_plan = merge_mod.MergePlan(
             *statics,
@@ -301,6 +355,7 @@ def _merge_sharded_program(
             edge_u=edge_u,
             edge_v=edge_v,
             edge_w=edge_w,
+            lin=lin,
         )
         res = merge_mod.merge_scan(
             local_plan,
@@ -314,7 +369,7 @@ def _merge_sharded_program(
     run = compat.shard_map(
         local_run,
         mesh,
-        in_specs=(P(), P(), P(), P(), P()),
+        in_specs=(P(), P(), P(), P(), P(), P()),
         out_specs=(P(), P()),
     )
     return compat.jit(run)
@@ -392,17 +447,25 @@ def solve_distributed(
 
     ``mesh_spec`` is a `jax.sharding.Mesh`, a parsed ``{"data": 2}`` dict,
     a ``"data=2,model=4"`` CLI string, or None — None (or an empty mesh)
-    falls back to the single-device `solve` unchanged. Returns the same
+    falls back to the single-device `solve` unchanged. ``graph`` may be a
+    `Graph` (Max-Cut) or a `core.graph.Problem` (weighted Max-Cut / QUBO /
+    MIS); linear terms thread through every stage and the reported value is
+    the full objective including the constant offset. Returns the same
     `ParaQAOAOutput` as `solve`.
     """
     from repro.core import paraqaoa as para_mod
-    from repro.core.graph import cut_value
+    from repro.core import partition as partition_mod
+    from repro.core.graph import as_problem, problem_value
     from repro.core.partition import partition_for_solver
     from repro.obs import trace as trace_mod
 
     mesh = as_mesh(mesh_spec)
     if mesh is None or not mesh.shape:
         return para_mod.solve(graph, cfg, partition=partition)
+
+    prob = as_problem(graph)
+    graph = prob.graph
+    has_lin = prob.has_linear
 
     data_axes = compat.mesh_data_axes(mesh)
     model_axis = compat.mesh_model_axis(mesh)
@@ -420,6 +483,12 @@ def solve_distributed(
         # ---- stage 1: host-side partition at the lifted budget -----------
         with tr.span("partition", n_qubits=budget) as sp_part:
             part = partition or partition_for_solver(graph, budget)
+            # each vertex's linear term lands in exactly one subproblem
+            # (first-coverage rule; shared vertices see h = 0 downstream)
+            sub_lins = (
+                partition_mod.split_linear(part, prob.linear)
+                if has_lin else None
+            )
 
         # ---- stage 2: solver pool + oversized-subproblem routing ---------
         qcfg = cfg.qaoa_config()
@@ -440,10 +509,20 @@ def solve_distributed(
                 edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
                     [part.subgraphs[i] for i in small], device_cap
                 )
+                linears = (
+                    qaoa_mod.pad_linear_arrays(
+                        [sub_lins[i] for i in small], device_cap
+                    )
+                    if has_lin else None
+                )
                 if data_axes:
                     res = solve_pool(edges, weights, masks, qcfg, mesh,
-                                     axes=data_axes)
-                else:  # model-only mesh: the pool itself stays single-device
+                                     axes=data_axes, linears=linears)
+                elif has_lin:  # model-only mesh: single-device pool
+                    res = qaoa_mod.solve_subgraph_batch_program(
+                        qcfg, has_linear=True
+                    )(edges, weights, masks, linears)
+                else:
                     res = qaoa_mod.solve_subgraph_batch_program(qcfg)(
                         edges, weights, masks
                     )
@@ -469,6 +548,12 @@ def solve_distributed(
                     b_edges, b_weights, _ = qaoa_mod.pad_subgraph_arrays(
                         subs, n_sub
                     )
+                    b_linears = (
+                        qaoa_mod.pad_linear_arrays(
+                            [sub_lins[i] for i in idxs], n_sub
+                        )
+                        if has_lin else None
+                    )
                     res = sharded_qaoa_batch(
                         b_edges,
                         b_weights,
@@ -482,6 +567,7 @@ def solve_distributed(
                         group=qcfg.mixer_group,
                         opt_steps=sharded_steps,
                         learning_rate=cfg.learning_rate,
+                        linears=b_linears,
                     )
                     bit_indices[idxs] = (
                         np.asarray(res.bitstrings)
@@ -503,7 +589,10 @@ def solve_distributed(
             tr.end(root)
             raise ValueError(f"unknown merge_mode {merge_mode!r}")
         with tr.span("merge", m=part.m) as sp_merge:
-            plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
+            plan = merge_mod.build_merge_plan(
+                part, bit_indices, cfg.top_k,
+                linear=prob.linear if has_lin else None,
+            )
             bw = cfg.beam_width or merge_mod.exact_beam_width(
                 cfg.top_k, part.m, cap=cfg.beam_cap
             )
@@ -539,14 +628,18 @@ def solve_distributed(
                 from repro.core.baselines.local_search import refine
 
                 assignment, cut = refine(
-                    part.graph, assignment, cfg.refine_steps
+                    part.graph, assignment, cfg.refine_steps,
+                    linear=prob.linear if has_lin else None,
                 )
     tr.end(root)
 
-    check = float(cut_value(part.graph, jnp.asarray(assignment)))
+    # re-score with the full objective; the merge's beam score must agree
+    # on the internal (offset-free) part
+    obj = float(problem_value(prob, jnp.asarray(assignment)))
+    internal = obj - prob.offset
     if cfg.refine_steps == 0:
-        assert abs(check - cut) < 1e-2 * max(1.0, abs(check)), (check, cut)
-    cut = check
+        assert abs(internal - cut) < 1e-2 * max(1.0, abs(internal)), (internal, cut)
+    cut = obj
 
     timings = {
         "partition_s": sp_part.duration_s,

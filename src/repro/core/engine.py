@@ -135,10 +135,16 @@ def layout_index_maps(layout: ShardedLayout, device: int):
     return idx_a, idx_b
 
 
-def cut_table(layout: Layout, edges, weights) -> CutTable:
-    """Cut values of every owned basis state, in every layout visited."""
+def cut_table(layout: Layout, edges, weights, linear=None) -> CutTable:
+    """Objective values of every owned basis state, in every layout visited.
+
+    ``linear`` (n,) f32, optional, adds per-vertex diagonal terms (QUBO/MIS)
+    to every view; ``None`` keeps the Max-Cut trace unchanged.
+    """
     if isinstance(layout, FlatLayout):
-        return CutTable(ops.cutvals(layout.n, edges, weights), None, None, None)
+        return CutTable(
+            ops.cutvals(layout.n, edges, weights, linear), None, None, None
+        )
     L, chunk = layout.local_dim, layout.chunk
     me = jax.lax.axis_index(layout.axis)
     q = jnp.arange(L, dtype=jnp.int32)
@@ -147,9 +153,9 @@ def cut_table(layout: Layout, edges, weights) -> CutTable:
     # both views are built unconditionally; the faithful schedule never
     # reads the B view and XLA dead-code-eliminates it
     return CutTable(
-        ops.cutvals_at(idx_a, edges, weights),
+        ops.cutvals_at(idx_a, edges, weights, linear),
         idx_a,
-        ops.cutvals_at(idx_b, edges, weights),
+        ops.cutvals_at(idx_b, edges, weights, linear),
         idx_b,
     )
 

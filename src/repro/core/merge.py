@@ -51,6 +51,7 @@ class MergePlan(NamedTuple):
     edge_u: jnp.ndarray  # (M, E_lv) int32 earlier-covered endpoint
     edge_v: jnp.ndarray  # (M, E_lv) int32 later-covered endpoint (>= lo)
     edge_w: jnp.ndarray  # (M, E_lv) float32
+    lin: jnp.ndarray  # (M, n_max) float32 linear terms at first coverage
 
 
 class MergePlanStatics(NamedTuple):
@@ -69,7 +70,8 @@ def plan_statics(plan: "MergePlan") -> MergePlanStatics:
 
 def plan_arrays(plan: "MergePlan") -> tuple:
     """The traced (device-array) half of a MergePlan, in MergePlan order."""
-    return (plan.lo, plan.cand_bits, plan.edge_u, plan.edge_v, plan.edge_w)
+    return (plan.lo, plan.cand_bits, plan.edge_u, plan.edge_v, plan.edge_w,
+            plan.lin)
 
 
 class MergeResult(NamedTuple):
@@ -80,12 +82,15 @@ class MergeResult(NamedTuple):
 
 
 def build_merge_plan(
-    part: Partition, bitstring_indices: np.ndarray, k: int
+    part: Partition, bitstring_indices: np.ndarray, k: int, linear=None
 ) -> MergePlan:
     """Bucket edges by level and unpack candidate indices to bit arrays.
 
     bitstring_indices: (M, K) int basis indices from the QAOA solvers
-    (bit q of subgraph i's index = local vertex q).
+    (bit q of subgraph i's index = local vertex q). ``linear`` (V,) f32,
+    optional, buckets each vertex's diagonal term onto its first-coverage
+    level (the same exactly-once rule edges follow), so the beam scores
+    the full quadratic + linear objective.
     """
     g = part.graph
     m = part.m
@@ -133,6 +138,17 @@ def build_merge_plan(
         & 1
     ).astype(np.int8)
 
+    # linear terms at first coverage: vertex v lands in bucket cover[v] at
+    # local position v - lo[cover[v]] (always < n_max since v is inside its
+    # first range). Zero when no linear terms — the Max-Cut case scores
+    # exact +0.0 contributions everywhere.
+    lin_arr = np.zeros((m, n_max), dtype=np.float32)
+    if linear is not None:
+        lin_np = np.asarray(linear, dtype=np.float32)
+        assert lin_np.shape == (g.n,), (lin_np.shape, g.n)
+        verts = np.arange(g.n)
+        lin_arr[cover, verts - lo[cover]] = lin_np
+
     return MergePlan(
         n_vert=g.n,
         n_pad=g.n + n_max,
@@ -143,14 +159,18 @@ def build_merge_plan(
         edge_u=jnp.asarray(edge_u),
         edge_v=jnp.asarray(edge_v),
         edge_w=jnp.asarray(edge_w),
+        lin=jnp.asarray(lin_arr),
     )
 
 
-def _level_delta(beam_assign, oriented, lo, edge_u, edge_v, edge_w, n_max):
-    """Score contribution of this level's edge bucket.
+def _level_delta(beam_assign, oriented, lo, edge_u, edge_v, edge_w, n_max, lin):
+    """Score contribution of this level's edge + linear buckets.
 
-    beam_assign: (W, V_pad) int8; oriented: (W, K, n_max) int8.
-    Returns (W, K) float32.
+    beam_assign: (W, V_pad) int8; oriented: (W, K, n_max) int8; lin (n_max,).
+    Returns (W, K) float32. The linear term is scored on the *oriented*
+    candidate bits: Max-Cut's global flip symmetry (both orientations of a
+    candidate share a cut value) is broken by nonzero ``lin``, and this is
+    where the two orientations pick up their differing Σ h_v·x_v.
     """
     v_local = jnp.clip(edge_v - lo, 0, n_max - 1)  # (E,)
     u_local = jnp.clip(edge_u - lo, 0, n_max - 1)
@@ -161,7 +181,7 @@ def _level_delta(beam_assign, oriented, lo, edge_u, edge_v, edge_w, n_max):
     s_v = oriented[:, :, v_local]  # (W, K, E)
     s_u = jnp.where(u_in_prefix[None, None, :], s_u_prefix[:, None, :], s_u_cand)
     crossed = (s_u ^ s_v).astype(jnp.float32)  # (W, K, E)
-    return crossed @ edge_w  # (W, K)
+    return crossed @ edge_w + oriented.astype(jnp.float32) @ lin  # (W, K)
 
 
 def _seed_frontier(plan: MergePlan, w_width: int):
@@ -186,6 +206,7 @@ def _seed_frontier(plan: MergePlan, w_width: int):
         plan.edge_v[0],
         plan.edge_w[0],
         plan.n_max,
+        plan.lin[0],
     )[:, 0]
 
     beam_assign = jnp.zeros((w_width, plan.n_pad), dtype=jnp.int8)
@@ -222,13 +243,13 @@ def _level_step(
     """
     neg = jnp.float32(-1e30)
     beam_assign, beam_score = carry
-    (lo, bits, eu, ev, ew), level = xs
+    (lo, bits, eu, ev, ew, lin), level = xs
     # orient candidates to agree with the shared vertex (lo)
     shared = beam_assign[:, lo]  # (W,)
     flip = (bits[None, :, 0] ^ shared[:, None]).astype(jnp.int8)  # (W, K)
     oriented = bits[None, :, :] ^ flip[:, :, None]  # (W, K, n_max)
 
-    delta = _level_delta(beam_assign, oriented, lo, eu, ev, ew, n_max)
+    delta = _level_delta(beam_assign, oriented, lo, eu, ev, ew, n_max, lin)
     scores = beam_score[:, None] + delta  # (W, K); -inf rows stay -inf
     flat = scores.reshape(-1)
     if stripe:
@@ -296,6 +317,7 @@ def merge_scan(
                 plan.edge_u[1:],
                 plan.edge_v[1:],
                 plan.edge_w[1:],
+                plan.lin[1:],
             ),
             jnp.arange(1, m, dtype=jnp.int32),
         )
@@ -373,6 +395,7 @@ def merge_stream(
         np.asarray(plan.edge_v),
         np.asarray(plan.edge_w),
     )
+    lin_h = np.asarray(plan.lin)
     plan_host = (lo_h, bits_h, plan.n_max)
 
     def snapshot(carry, level: int) -> AnytimeSnapshot:
@@ -380,10 +403,13 @@ def merge_stream(
         best = int(np.argmax(np.asarray(beam_score)))
         partial = np.asarray(beam_assign[best], dtype=np.int8)
         full = _complete_suffix(plan_host, partial, level)
-        # exact cut from the level buckets (each edge appears exactly once;
-        # padding rows have u == v and weight 0, contributing nothing)
+        # exact objective from the level buckets (each edge and each linear
+        # term appears exactly once; padding rows have u == v and weight 0)
         crossed = (full[eu_h] ^ full[ev_h]).astype(np.float32)
         cut = float(np.sum(crossed * ew_h))
+        for l in range(m):
+            win = full[lo_h[l] : lo_h[l] + plan.n_max].astype(np.float32)
+            cut += float(lin_h[l] @ win)
         return AnytimeSnapshot(
             level=level + 1,
             n_levels=m,
@@ -413,6 +439,7 @@ def merge_stream(
                     plan.edge_u[l],
                     plan.edge_v[l],
                     plan.edge_w[l],
+                    plan.lin[l],
                 ),
                 jnp.int32(l),
             )

@@ -18,11 +18,12 @@ import numpy as np
 
 from repro.core import merge as merge_mod
 from repro.core import qaoa as qaoa_mod
-from repro.core.graph import Graph, cut_value
+from repro.core.graph import Graph, Problem, as_problem, cut_value, problem_value
 from repro.core.partition import (
     Partition,
     connectivity_preserving_partition,
     partition_for_solver,
+    split_linear,
 )
 from repro.core.pei import SolveReport
 from repro.obs import trace as trace_mod
@@ -71,12 +72,16 @@ class ParaQAOAOutput:
 
 
 def merge_inputs(
-    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig
+    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig,
+    linear=None,
 ) -> tuple[merge_mod.MergePlan, int]:
     """Stage-3 (plan, beam width) derivation, shared by every merge
     consumer — `merge_candidates` below and the service's anytime stream
-    (DESIGN.md §6.4) — so the beam/cap rules cannot silently diverge."""
-    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k)
+    (DESIGN.md §6.4) — so the beam/cap rules cannot silently diverge.
+    ``linear`` (V,) f32, optional, scores the QUBO/MIS linear terms in the
+    beam (each vertex counted once, at its first-coverage level)."""
+    plan = merge_mod.build_merge_plan(part, bit_indices, cfg.top_k,
+                                      linear=linear)
     bw = cfg.beam_width or merge_mod.exact_beam_width(
         cfg.top_k, part.m, cap=cfg.beam_cap
     )
@@ -84,26 +89,39 @@ def merge_inputs(
 
 
 def merge_candidates(
-    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig
+    part: Partition, bit_indices: np.ndarray, cfg: ParaQAOAConfig,
+    linear=None,
 ) -> tuple[np.ndarray, float, int]:
-    """Stage-3 merge of solved candidates → (assignment, cut, beam width).
+    """Stage-3 merge of solved candidates → (assignment, score, beam width).
 
     The single merge path shared by `solve` and the serve-side scheduler
     (`repro.service.scheduler`, DESIGN.md §6.1): running the identical
     plan/beam computation is what keeps service results bit-identical to
-    solo `solve` runs on the same knobs.
+    solo `solve` runs on the same knobs. The returned score is the internal
+    (offset-free) objective: quadratic cut + linear terms.
     """
-    plan, bw = merge_inputs(part, bit_indices, cfg)
+    plan, bw = merge_inputs(part, bit_indices, cfg, linear=linear)
     merged = merge_mod.merge_scan(plan, bw)
     return np.asarray(merged.assignment), float(merged.cut_value), bw
 
 
 def solve(
-    graph: Graph,
+    graph: Graph | Problem,
     cfg: ParaQAOAConfig = ParaQAOAConfig(),
     partition: Partition | None = None,
 ) -> ParaQAOAOutput:
-    """Solve one Max-Cut instance end to end on the current default device."""
+    """Solve one instance end to end on the current default device.
+
+    ``graph`` may be a plain `Graph` (Max-Cut) or a `core.graph.Problem`
+    (weighted Max-Cut / QUBO / MIS): linear terms thread through the cost
+    oracle, the partition (each vertex's term to exactly one subproblem)
+    and the merge beam; the reported value is the full objective including
+    the constant offset. A `Graph` input follows the exact zero-linear
+    special case — byte-identical traces to the linear-free solver.
+    """
+    prob = as_problem(graph)
+    graph = prob.graph
+    has_lin = prob.has_linear
     # §8: stage timings come from the ambient tracer's spans — with the
     # default (non-recording) tracer this is the same perf_counter
     # stamping as before; `solve_maxcut --trace-out` installs a
@@ -113,6 +131,7 @@ def solve(
         # ---- stage 1: graph partition (paper Alg. 1) ---------------------
         with tr.span("partition", n_qubits=cfg.n_qubits) as sp_part:
             part = partition or partition_for_solver(graph, cfg.n_qubits)
+            sub_lins = split_linear(part, prob.linear) if has_lin else None
 
         # ---- stage 2: parallelized QAOA execution ------------------------
         with tr.span("solve_pool", m=part.m,
@@ -121,14 +140,23 @@ def solve(
             edges, weights, masks = qaoa_mod.pad_subgraph_arrays(
                 part.subgraphs, qcfg.n_qubits
             )
-            result = qaoa_mod.solve_subgraph_batch_program(qcfg)(
-                edges, weights, masks
-            )
+            if has_lin:
+                linears = qaoa_mod.pad_linear_arrays(sub_lins, qcfg.n_qubits)
+                result = qaoa_mod.solve_subgraph_batch_program(
+                    qcfg, has_linear=True
+                )(edges, weights, masks, linears)
+            else:
+                result = qaoa_mod.solve_subgraph_batch_program(qcfg)(
+                    edges, weights, masks
+                )
             bit_indices = np.asarray(result.bitstrings)  # (M, K)
 
         # ---- stage 3: level-aware parallel merge -------------------------
         with tr.span("merge", m=part.m) as sp_merge:
-            assignment, cut, bw = merge_candidates(part, bit_indices, cfg)
+            assignment, cut, bw = merge_candidates(
+                part, bit_indices, cfg,
+                linear=prob.linear if has_lin else None,
+            )
 
         # ---- optional beyond-paper refinement ----------------------------
         with tr.span("refine", steps=cfg.refine_steps) as sp_refine:
@@ -136,14 +164,17 @@ def solve(
                 from repro.core.baselines.local_search import refine
 
                 assignment, cut = refine(
-                    part.graph, assignment, cfg.refine_steps
+                    part.graph, assignment, cfg.refine_steps,
+                    linear=prob.linear if has_lin else None,
                 )
 
     # sanity: merge's incremental score must equal a from-scratch evaluation
-    check = float(cut_value(part.graph, jnp.asarray(assignment)))
+    # of the internal (offset-free) objective; report the full objective
+    obj = float(problem_value(prob, jnp.asarray(assignment)))
+    internal = obj - prob.offset
     if cfg.refine_steps == 0:
-        assert abs(check - cut) < 1e-2 * max(1.0, abs(check)), (check, cut)
-    cut = check
+        assert abs(internal - cut) < 1e-2 * max(1.0, abs(internal)), (internal, cut)
+    cut = obj
 
     timings = {
         "partition_s": sp_part.duration_s,

@@ -185,6 +185,30 @@ def _build_partition(graph: Graph, ranges: List[tuple], pad_edges: bool) -> Part
     )
 
 
+def split_linear(part: Partition, linear) -> List[np.ndarray]:
+    """Assign each vertex's linear term to exactly one subproblem.
+
+    Adjacent ranges overlap in one shared vertex, so a naive per-range slice
+    would double-count its ``h_v``. Vertex v's term goes to its *first*
+    covering range (the same first-coverage rule `merge.build_merge_plan`
+    uses for vertices); later ranges see h = 0 at the shared position.
+    ``linear`` is indexed in ``part.graph``'s vertex labels; returns one
+    (size_i,) float32 array per subgraph in local labels.
+    """
+    lin = np.asarray(linear, dtype=np.float32)
+    assert lin.shape == (part.graph.n,), (lin.shape, part.graph.n)
+    hi_arr = np.asarray([hi for _, hi in part.ranges], dtype=np.int64)
+    level = np.searchsorted(hi_arr, np.arange(part.graph.n), side="right")
+    level = np.clip(level, 0, part.m - 1)
+    out: List[np.ndarray] = []
+    for i, (lo, hi) in enumerate(part.ranges):
+        li = np.zeros(hi - lo, dtype=np.float32)
+        idx = np.nonzero(level == i)[0]
+        li[idx - lo] = lin[idx]
+        out.append(li)
+    return out
+
+
 def stitch_assignments(part: Partition, local_bits: List[np.ndarray]) -> np.ndarray:
     """Concatenate per-subgraph 0/1 assignments into a global assignment.
 

@@ -107,14 +107,17 @@ def topk_marginal(re, im, n: int, real_mask, k: int):
     return inds, vals
 
 
-def solve_subgraph(edges, weights, real_mask, cfg: QAOAConfig) -> QAOAResult:
+def solve_subgraph(edges, weights, real_mask, cfg: QAOAConfig, linear=None) -> QAOAResult:
     """End-to-end QAOA solve of one (padded) subgraph.
 
     edges/weights are padded to a common (E_pad,) size; real_mask encodes the
-    live qubit count. Designed to be vmapped across a subgraph batch.
+    live qubit count. ``linear`` (n_qubits,) f32, optional, adds per-vertex
+    diagonal terms (QUBO/MIS) to the cost oracle; ``None`` keeps the Max-Cut
+    trace identical to the linear-free solver. Designed to be vmapped across
+    a subgraph batch.
     """
     n = cfg.n_qubits
-    cutv = ops.cutvals(n, edges, weights)
+    cutv = ops.cutvals(n, edges, weights, linear)
     gammas, betas = optimize_params(cutv, n, cfg)
     re, im = qaoa_statevector(cutv, n, gammas, betas, group=cfg.mixer_group)
     exp = ops.expectation(re, im, cutv)
@@ -123,10 +126,13 @@ def solve_subgraph(edges, weights, real_mask, cfg: QAOAConfig) -> QAOAResult:
 
 
 solve_subgraph_batch = jax.vmap(solve_subgraph, in_axes=(0, 0, 0, None))
+solve_subgraph_batch_linear = jax.vmap(solve_subgraph, in_axes=(0, 0, 0, None, 0))
 
 
 @compat.cached_program
-def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str, tune: tuple):
+def _solve_subgraph_batch_program(
+    cfg: QAOAConfig, impl: str, tune: tuple, has_lin: bool = False
+):
     """Impl- and tuning-keyed builder behind `solve_subgraph_batch_program`.
 
     The `kernels.ops` dispatch reads the active implementation at
@@ -139,16 +145,27 @@ def _solve_subgraph_batch_program(cfg: QAOAConfig, impl: str, tune: tuple):
     ``tune`` is the `kernels.tuning` block-shape state (DESIGN.md §2.7),
     re-asserted the same way and for the same reason — tile choices are
     trace-time too, and the key makes them visible to the compile ledger.
+    ``has_lin`` selects the linear-terms variant (QUBO/MIS buckets, 4th
+    input array); the False key compiles the exact Max-Cut program of the
+    linear-free solver, keeping that path bit-identical.
     """
 
-    def run(e, w, m):
-        with ops.using_implementation(impl), tuning.using_state(tune):
-            return solve_subgraph_batch(e, w, m, cfg)
+    if has_lin:
+
+        def run(e, w, m, l):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return solve_subgraph_batch_linear(e, w, m, cfg, l)
+
+    else:
+
+        def run(e, w, m):
+            with ops.using_implementation(impl), tuning.using_state(tune):
+                return solve_subgraph_batch(e, w, m, cfg)
 
     return jax.jit(run)
 
 
-def solve_subgraph_batch_program(cfg: QAOAConfig):
+def solve_subgraph_batch_program(cfg: QAOAConfig, has_linear: bool = False):
     """Cached whole-batch jit of `solve_subgraph_batch` for one config.
 
     The end-to-end drivers run this instead of the eager vmap: one fused
@@ -160,10 +177,10 @@ def solve_subgraph_batch_program(cfg: QAOAConfig):
     (``QAOAConfig.opt_steps``) on a non-convex landscape amplify that
     last-ulp difference into different top-k picks). The underlying
     cache keys on (config, active `kernels.ops` implementation, active
-    `kernels.tuning` block-shape state).
+    `kernels.tuning` block-shape state, linear-terms variant).
     """
     return _solve_subgraph_batch_program(
-        cfg, ops.get_implementation(), tuning.state()
+        cfg, ops.get_implementation(), tuning.state(), bool(has_linear)
     )
 
 
@@ -202,3 +219,21 @@ def pad_subgraph_arrays(
         weights[i, :m] = np.asarray(g.weights)
         masks[i] = (1 << g.n) - 1
     return jnp.asarray(edges), jnp.asarray(weights), jnp.asarray(masks)
+
+
+def pad_linear_arrays(linears, n_qubits: int, n_rows: int | None = None):
+    """Stack per-subgraph linear-term vectors into one (rows, n_qubits)
+    float32 batch array, zero-padded on both axes — the companion of
+    `pad_subgraph_arrays` for QUBO/MIS buckets (padding qubits and filler
+    rows contribute h = 0, so they stay objective-neutral)."""
+    import numpy as np
+
+    b = len(linears)
+    rows = b if n_rows is None else n_rows
+    assert rows >= b, (rows, b)
+    out = np.zeros((rows, n_qubits), dtype=np.float32)
+    for i, l in enumerate(linears):
+        l = np.asarray(l, dtype=np.float32)
+        assert l.shape[0] <= n_qubits, (l.shape[0], n_qubits)
+        out[i, : l.shape[0]] = l
+    return jnp.asarray(out)

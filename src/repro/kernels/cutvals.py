@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import ref as ref_mod
 from repro.kernels import tuning
 
 TILE_B = 1024  # basis states per block (8 sublanes × 128 lanes)
@@ -89,8 +90,14 @@ def _cutvals(n: int, edges, weights, *, tile: int, chunk: int, interpret: bool):
     return out.reshape(dim)
 
 
-def cutvals(n: int, edges, weights, *, interpret: bool = False):
-    """(2^n,) float32 cut values. edges (E,2) int32, weights (E,) f32."""
+def cutvals(n: int, edges, weights, linear=None, *, interpret: bool = False):
+    """(2^n,) float32 objective values. edges (E,2) int32, weights (E,) f32.
+
+    ``linear`` (n,) f32, when given, folds per-vertex terms in as virtual-bit
+    rows (`ref.append_linear_rows`) — the kernel body is untouched.
+    """
+    if linear is not None:
+        edges, weights = ref_mod.append_linear_rows(edges, weights, linear)
     dim = 2**n
     tile = tuning.clamp_tile(dim, tuning.param("cutvals", dim, "tile_b", TILE_B))
     chunk = tuning.param("cutvals", dim, "edge_chunk", EDGE_CHUNK)
@@ -147,8 +154,10 @@ def _cutvals_at(idx, edges, weights, *, tile: int, chunk: int, interpret: bool):
     return out.reshape(m_pad)[:m]
 
 
-def cutvals_at(idx, edges, weights, *, interpret: bool = False):
-    """Cut values at arbitrary basis indices: (M,) f32 for (M,) int32 idx."""
+def cutvals_at(idx, edges, weights, linear=None, *, interpret: bool = False):
+    """Objective values at arbitrary basis indices: (M,) f32 for (M,) int32 idx."""
+    if linear is not None:
+        edges, weights = ref_mod.append_linear_rows(edges, weights, linear)
     m = idx.shape[0]
     _, tile = tuning.pad_and_tile(
         m, tuning.param("cutvals_at", m, "tile_b", TILE_B))

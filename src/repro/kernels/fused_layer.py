@@ -17,6 +17,11 @@ relayout versus the unfused path.
 called with (−γ, −β) that is exactly the adjoint of the forward kernel,
 which is how the `kernels.ops` layer custom-vjp backward runs this same
 kernel for the gradient trace (DESIGN.md §2.7).
+
+Oracle contract: ``c`` is *any* diagonal objective, not specifically a cut
+value — per-vertex linear terms (QUBO/MIS, DESIGN.md §9) are folded into
+``c`` upstream by ``cutvals(..., linear=...)`` via virtual-bit edge rows,
+so this kernel serves all three problem families without modification.
 """
 
 from __future__ import annotations

@@ -29,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.obs.ledger import get_ledger
@@ -90,24 +91,144 @@ def _f32(x):
     return jnp.asarray(x, jnp.float32)
 
 
-def cutvals(n: int, edges, weights):
+# ---------------------------------------------------------------------------
+# cutvals / cutvals_at — diagonal objective oracle, closed-form VJP over
+# (weights, linear). The diagonal is linear in both coefficient arrays, so
+# the cotangents are plain masked reductions of the output cotangent:
+#   d_w[e]   = Σ_b g[b] · xor_e(b)
+#   d_lin[v] = Σ_b g[b] · bit_v(b)
+# — cheap elementwise reductions left to XLA, per the PR 9 convention.
+# Integer primals (edges, idx) get float0 symbolic-zero cotangents.
+# ---------------------------------------------------------------------------
+
+def _int_zero(x):
+    """Symbolic-zero cotangent for an integer-dtype primal."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _cutvals_dispatch(n, edges, weights, linear):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import cutvals as k
+
+        return k.cutvals(n, edges, weights, linear, interpret=p["interpret"])
+    return ref.cutvals(n, edges, weights, linear)
+
+
+def _cutvals_at_dispatch(idx, edges, weights, linear):
+    p = _pallas()
+    if p["use"]:
+        from repro.kernels import cutvals as k
+
+        return k.cutvals_at(idx, edges, weights, linear, interpret=p["interpret"])
+    return ref.cutvals_at(idx, edges, weights, linear)
+
+
+def _cutvals_grads(n_lin: int, edges, idx, g):
+    """Shared (d_weights, d_linear) reductions for the cutvals VJPs."""
+
+    def edge_body(_, e):
+        i, j = e
+        crossed = (((idx >> i) ^ (idx >> j)) & 1).astype(jnp.float32)
+        return None, jnp.sum(g * crossed)
+
+    _, d_w = jax.lax.scan(edge_body, None, (edges[:, 0], edges[:, 1]))
+
+    def bit_body(_, v):
+        bit = ((idx >> v) & 1).astype(jnp.float32)
+        return None, jnp.sum(g * bit)
+
+    _, d_lin = jax.lax.scan(bit_body, None, jnp.arange(n_lin, dtype=jnp.int32))
+    return d_w, d_lin
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cutvals_vjp(n, edges, weights, linear):
+    return _cutvals_dispatch(n, edges, weights, linear)
+
+
+def _cutvals_fwd(n, edges, weights, linear):
+    return _cutvals_dispatch(n, edges, weights, linear), edges
+
+
+def _cutvals_bwd(n, edges, g):
+    idx = jnp.arange(2**n, dtype=jnp.int32)
+    d_w, d_lin = _cutvals_grads(n, edges, idx, g)
+    return _int_zero(edges), d_w, d_lin
+
+
+_cutvals_vjp.defvjp(_cutvals_fwd, _cutvals_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cutvals_vjp_nolin(n, edges, weights):
+    return _cutvals_dispatch(n, edges, weights, None)
+
+
+def _cutvals_nolin_fwd(n, edges, weights):
+    return _cutvals_dispatch(n, edges, weights, None), edges
+
+
+def _cutvals_nolin_bwd(n, edges, g):
+    idx = jnp.arange(2**n, dtype=jnp.int32)
+    d_w, _ = _cutvals_grads(0, edges, idx, g)
+    return _int_zero(edges), d_w
+
+
+_cutvals_vjp_nolin.defvjp(_cutvals_nolin_fwd, _cutvals_nolin_bwd)
+
+
+@jax.custom_vjp
+def _cutvals_at_vjp(idx, edges, weights, linear):
+    return _cutvals_at_dispatch(idx, edges, weights, linear)
+
+
+def _cutvals_at_fwd(idx, edges, weights, linear):
+    return _cutvals_at_dispatch(idx, edges, weights, linear), (idx, edges, linear)
+
+
+def _cutvals_at_bwd(res, g):
+    idx, edges, linear = res
+    d_w, d_lin = _cutvals_grads(linear.shape[0], edges, idx, g)
+    return _int_zero(idx), _int_zero(edges), d_w, d_lin
+
+
+_cutvals_at_vjp.defvjp(_cutvals_at_fwd, _cutvals_at_bwd)
+
+
+@jax.custom_vjp
+def _cutvals_at_vjp_nolin(idx, edges, weights):
+    return _cutvals_at_dispatch(idx, edges, weights, None)
+
+
+def _cutvals_at_nolin_fwd(idx, edges, weights):
+    return _cutvals_at_dispatch(idx, edges, weights, None), (idx, edges)
+
+
+def _cutvals_at_nolin_bwd(res, g):
+    idx, edges = res
+    d_w, _ = _cutvals_grads(0, edges, idx, g)
+    return _int_zero(idx), _int_zero(edges), d_w
+
+
+_cutvals_at_vjp_nolin.defvjp(_cutvals_at_nolin_fwd, _cutvals_at_nolin_bwd)
+
+
+def cutvals(n: int, edges, weights, linear=None):
+    """Objective value of every basis state. ``linear`` (n,) f32, optional,
+    adds per-vertex diagonal terms (QUBO/MIS); ``None`` keeps the Max-Cut
+    trace byte-identical to the linear-free op."""
     _note("cutvals", edges)
-    p = _pallas()
-    if p["use"]:
-        from repro.kernels import cutvals as k
-
-        return k.cutvals(n, edges, weights, interpret=p["interpret"])
-    return ref.cutvals(n, edges, weights)
+    if linear is None:
+        return _cutvals_vjp_nolin(n, edges, weights)
+    return _cutvals_vjp(n, edges, weights, jnp.asarray(linear, jnp.float32))
 
 
-def cutvals_at(idx, edges, weights):
+def cutvals_at(idx, edges, weights, linear=None):
     _note("cutvals_at", idx)
-    p = _pallas()
-    if p["use"]:
-        from repro.kernels import cutvals as k
-
-        return k.cutvals_at(idx, edges, weights, interpret=p["interpret"])
-    return ref.cutvals_at(idx, edges, weights)
+    if linear is None:
+        return _cutvals_at_vjp_nolin(idx, edges, weights)
+    return _cutvals_at_vjp(idx, edges, weights, jnp.asarray(linear, jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,25 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# Linear (per-vertex) terms fold into the XOR edge form through a virtual
+# bit: h_v * bit_v(b) == h_v * (bit_v(b) XOR bit_30(b)) because bit 30 of
+# any basis index is 0 (indices are int32 and n <= 29 everywhere). One
+# appended row (v, 30, h_v) per vertex therefore makes the *unchanged* XOR
+# kernels score quadratic + linear in a single pass.
+VIRTUAL_BIT = 30
+
+
+def append_linear_rows(edges: jnp.ndarray, weights: jnp.ndarray, linear: jnp.ndarray):
+    """Append one (v, VIRTUAL_BIT, h_v) row per vertex to the edge arrays."""
+    n = linear.shape[0]
+    v = jnp.arange(n, dtype=jnp.int32)
+    extra = jnp.stack([v, jnp.full((n,), VIRTUAL_BIT, dtype=jnp.int32)], axis=1)
+    return (
+        jnp.concatenate([edges, extra], axis=0),
+        jnp.concatenate([weights, linear.astype(weights.dtype)], axis=0),
+    )
+
+
 def popcount(x: jnp.ndarray) -> jnp.ndarray:
     """Population count for non-negative int32 arrays (SWAR, no wraparound)."""
     x = x - ((x >> 1) & 0x55555555)
@@ -31,12 +50,17 @@ def popcount(x: jnp.ndarray) -> jnp.ndarray:
     return x & 0x3F
 
 
-def cutvals(n: int, edges: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """Cut value of every basis state: (2^n,) float32.
+def cutvals(
+    n: int, edges: jnp.ndarray, weights: jnp.ndarray, linear: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Objective value of every basis state: (2^n,) float32.
 
     ``edges`` (E, 2) int32, ``weights`` (E,) float32; padding rows must be
-    (0, 0) with weight 0.
+    (0, 0) with weight 0. ``linear`` (n,) float32, when given, adds
+    ``sum_v h_v * bit_v(b)`` via virtual-bit rows.
     """
+    if linear is not None:
+        edges, weights = append_linear_rows(edges, weights, linear)
     idx = jnp.arange(2**n, dtype=jnp.int32)
 
     def body(acc, ew):
@@ -49,9 +73,16 @@ def cutvals(n: int, edges: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return acc
 
 
-def cutvals_at(idx: jnp.ndarray, edges: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """Cut values at arbitrary basis indices (for sharded statevectors,
+def cutvals_at(
+    idx: jnp.ndarray,
+    edges: jnp.ndarray,
+    weights: jnp.ndarray,
+    linear: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Objective values at arbitrary basis indices (for sharded statevectors,
     where each device owns a slice/permutation of the amplitude space)."""
+    if linear is not None:
+        edges, weights = append_linear_rows(edges, weights, linear)
 
     def body(acc, ew):
         i, j, w = ew

@@ -42,6 +42,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="fraction of requests that repeat an earlier graph "
                     "under a random vertex relabeling (exercises the "
                     "canonical-graph cache)")
+    ap.add_argument("--problem", choices=("maxcut", "qubo", "mis"),
+                    default="maxcut",
+                    help="problem family of the request mix: Max-Cut "
+                    "graphs, random QUBOs (quadratic + linear terms), or "
+                    "penalty-encoded maximum-independent-set instances — "
+                    "all served through the same diagonal-cost oracle")
+    ap.add_argument("--weights", choices=("unit", "uniform", "spin"),
+                    default="unit",
+                    help="edge-weight family of the instance topology: "
+                    "unit weights, uniform(0.1,1) weights, or ±1 "
+                    "spin-glass couplings")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request SLA deadline in seconds (omit for "
                     "best-quality planning)")
@@ -125,11 +136,12 @@ def run(argv=None):
 
     from repro.obs.trace import Tracer
     from repro.service import SLA, ServiceConfig, SolveService
-    from repro.service.workload import request_mix, tenant_mix
+    from repro.service.workload import problem_mix, tenant_mix
 
-    requests = request_mix(
+    requests = problem_mix(
         args.requests, (args.n_min, args.n_max), args.p,
         args.repeat_frac, args.seed,
+        problem=args.problem, weights=args.weights,
     )
     tenants = tenant_mix(args.requests, args.tenants, args.seed)
 
@@ -179,8 +191,10 @@ def run(argv=None):
             f"N={kn.n_qubits} K={kn.top_k} T={kn.opt_steps} W={kn.beam_width}"
         )
         tail = f" [{r.downgrades} downgrade(s)]" if r.downgrades else ""
+        integral = args.problem == "maxcut" and args.weights == "unit"
+        val = f"{r.cut_value:.0f}" if integral else f"{r.cut_value:.2f}"
         print(f"[serve_maxcut] req {rid} ({r.tenant}): n={g.n} "
-              f"cut={r.cut_value:.0f} latency={r.latency_s:.2f}s ({src})"
+              f"value={val} latency={r.latency_s:.2f}s ({src})"
               f"{tail}")
 
     st = svc.stats

@@ -32,6 +32,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="Erdős-Rényi edge probability")
     ap.add_argument("--seed", type=int, default=0,
                     help="graph-generation seed (runs are seed-stable)")
+    ap.add_argument("--problem", choices=("maxcut", "qubo", "mis"),
+                    default="maxcut",
+                    help="problem family: Max-Cut on the generated graph, "
+                    "a random QUBO over its topology (quadratic + N(0,1) "
+                    "linear terms), or penalty-encoded maximum independent "
+                    "set — all through the same diagonal-cost oracle")
+    ap.add_argument("--weights", choices=("unit", "uniform", "spin"),
+                    default="unit",
+                    help="edge-weight family: unit weights, "
+                    "uniform(0.1,1) weights, or ±1 spin-glass couplings")
+    ap.add_argument("--check-oracle", action="store_true",
+                    help="small-n only (n <= 18): compare the solved "
+                    "objective against exhaustive brute force and, for "
+                    "--problem mis, assert the selected set is independent")
     ap.add_argument("--qubits", type=int, default=10,
                     help="per-device qubit budget N (paper: 26 on GPU); "
                     "a model mesh axis lifts it to N + log2(model)")
@@ -102,13 +116,36 @@ def run(argv=None):
 
     import contextlib
 
+    import numpy as np
+
     from repro.core import ParaQAOAConfig, solve, solve_distributed
-    from repro.core.graph import Graph
+    from repro.core.graph import (
+        Graph,
+        Problem,
+        independent_set_violations,
+    )
     from repro.core.pei import pei
     from repro.obs.trace import Tracer, use_tracer
 
-    graph = Graph.erdos_renyi(args.n, args.p, seed=args.seed)
-    print(f"[maxcut] G({args.n}, {args.p}): {graph.n_edges} edges")
+    if args.weights == "uniform":
+        graph = Graph.erdos_renyi_weighted(args.n, args.p, seed=args.seed)
+    elif args.weights == "spin":
+        graph = Graph.spin_glass(args.n, args.p, seed=args.seed)
+    else:
+        graph = Graph.erdos_renyi(args.n, args.p, seed=args.seed)
+    if args.problem == "mis":
+        instance = Problem.mis(graph)
+    elif args.problem == "qubo":
+        rng = np.random.default_rng(args.seed + 0x9B0)
+        e = np.asarray(graph.edges)[: graph.n_edges]
+        q = np.asarray(graph.weights)[: graph.n_edges]
+        instance = Problem.qubo(
+            graph.n, e, q, linear=rng.normal(size=graph.n).astype(np.float32)
+        )
+    else:
+        instance = graph
+    print(f"[maxcut] G({args.n}, {args.p}): {graph.n_edges} edges "
+          f"({args.problem}, {args.weights} weights)")
     cfg = ParaQAOAConfig(
         n_qubits=args.qubits, top_k=args.k, p_layers=args.layers,
         opt_steps=args.opt_steps, beam_width=args.beam,
@@ -122,7 +159,7 @@ def run(argv=None):
     with scope:
         if mesh_spec is not None:
             out = solve_distributed(
-                graph, cfg, mesh_spec,
+                instance, cfg, mesh_spec,
                 schedule=args.schedule, merge_mode=args.merge_mode,
             )
             extra = out.report.extra
@@ -132,15 +169,38 @@ def run(argv=None):
                   f"{extra['sharded_subproblems']} model-sharded subproblems "
                   f"(sharded_opt_steps={extra['sharded_opt_steps']})")
         else:
-            out = solve(graph, cfg)
+            out = solve(instance, cfg)
     if tracer is not None:
         tracer.export(args.trace_out, args.trace_format)
         print(f"[maxcut] trace ({args.trace_format}, "
               f"{len(tracer.spans)} spans): {args.trace_out}")
-    print(f"[maxcut] cut = {out.cut_value:.0f}  "
+    print(f"[maxcut] value = {out.cut_value:.2f}  "
           f"(M={out.partition.m}, K={args.k}, {out.report.runtime_s:.2f}s)")
     for stage, t in out.timings.items():
         print(f"  {stage:12s} {t:.2f}s")
+
+    if args.problem == "mis":
+        viol = independent_set_violations(graph, out.assignment)
+        size = int(np.sum(np.asarray(out.assignment)))
+        print(f"[maxcut] mis: |S|={size}, conflict edges inside S: {viol}")
+        assert viol == 0, (
+            f"penalty-QUBO MIS produced {viol} conflict edge(s) — raise "
+            "the penalty or the refine/merge budget"
+        )
+
+    if args.check_oracle:
+        if args.n > 18:
+            raise SystemExit("--check-oracle needs --n <= 18 (exhaustive)")
+        from repro.core.baselines.brute_force import brute_force_problem
+
+        _, opt, rep = brute_force_problem(instance)
+        gap = opt - out.cut_value
+        print(f"[maxcut] oracle: brute-force optimum {opt:.2f} "
+              f"({rep.runtime_s:.2f}s), gap {gap:.4f}")
+        assert gap > -1e-3 * max(1.0, abs(opt)), (
+            "solver reported a value above the exhaustive optimum — "
+            "objective accounting is broken", out.cut_value, opt,
+        )
 
     if args.compare_gw:
         from repro.core.baselines import goemans_williamson

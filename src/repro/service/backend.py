@@ -32,7 +32,12 @@ class LocalBackend:
 
     name = "local"
 
-    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks):
+    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks,
+                    linears=None):
+        if linears is not None:
+            return qaoa_mod.solve_subgraph_batch_program(qcfg, has_linear=True)(
+                edges, weights, masks, linears
+            )
         return qaoa_mod.solve_subgraph_batch_program(qcfg)(
             edges, weights, masks
         )
@@ -75,9 +80,11 @@ class MeshBackend:
             total *= int(self.mesh.shape[a])
         return total
 
-    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks):
+    def solve_batch(self, qcfg: qaoa_mod.QAOAConfig, edges, weights, masks,
+                    linears=None):
         return self._dist.solve_pool(
-            edges, weights, masks, qcfg, self.mesh, axes=self.axes
+            edges, weights, masks, qcfg, self.mesh, axes=self.axes,
+            linears=linears,
         )
 
     def describe(self) -> dict:

@@ -3,8 +3,9 @@
 Entries are keyed on the canonical graph hash and store the best-known
 assignment in *canonical vertex order*, so a hit replays onto any
 relabeled-but-isomorphic instance through the querying graph's own
-canonical permutation. Every hit is re-scored against the querying graph
-(`cut_value`, O(|E|)) before being served: a hash collision or a
+canonical permutation. Every hit is re-scored against the querying
+graph/problem with the *full* objective (`problem_value` — quadratic +
+linear + offset, O(|E| + n)) before being served: a hash collision or a
 WL-equivalent non-isomorphic twin then degrades to a miss instead of a
 wrong answer.
 
@@ -22,7 +23,7 @@ from collections import OrderedDict
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, cut_value
+from repro.core.graph import Graph, Problem, as_problem, problem_value
 from repro.service.canonical import CanonicalForm, canonical_form
 
 
@@ -75,18 +76,23 @@ class ResultCache:
 
     def lookup(
         self,
-        graph: Graph,
+        graph: Graph | Problem,
         form: CanonicalForm | None = None,
         min_quality: float = 0.0,
     ) -> tuple[np.ndarray, float] | None:
-        """Return (assignment, cut) replayed onto `graph`'s labels, or None.
+        """Return (assignment, value) replayed onto `graph`'s labels, or None.
 
         `min_quality` gates stale-quality hits; `form` skips recomputing
-        the canonical form when the caller already has it.
+        the canonical form when the caller already has it. The hit is
+        re-scored with the *full* objective of the querying problem
+        (quadratic + linear + offset), not `cut_value` alone — two QUBOs
+        differing only in linear terms hash differently, but the re-score
+        guard must still catch any residual collision on the linear part.
         """
+        prob = as_problem(graph)
         form = form or canonical_form(graph)
         entry = self._entries.get(form.key)
-        if entry is None or entry.canon_assignment.shape[0] != graph.n:
+        if entry is None or entry.canon_assignment.shape[0] != prob.n:
             self.stats.misses += 1
             return None
         if entry.quality < min_quality:
@@ -94,7 +100,7 @@ class ResultCache:
             self.stats.quality_misses += 1
             return None
         assignment = entry.canon_assignment[form.perm]
-        replayed = float(cut_value(graph, jnp.asarray(assignment)))
+        replayed = float(problem_value(prob, jnp.asarray(assignment)))
         if abs(replayed - entry.cut) > 1e-2 * max(1.0, abs(entry.cut)):
             # collision / WL-twin: same key, different graph — refuse
             self.stats.misses += 1
@@ -106,16 +112,19 @@ class ResultCache:
 
     def store(
         self,
-        graph: Graph,
+        graph: Graph | Problem,
         assignment: np.ndarray,
         cut: float,
         quality: float = 0.0,
         form: CanonicalForm | None = None,
     ) -> None:
-        """Insert/upgrade the entry for `graph`. Keeps the better cut at
-        the higher quality mark; never downgrades an existing entry."""
+        """Insert/upgrade the entry for `graph`. ``cut`` is the full
+        objective value (for a `Problem`, including linear terms and
+        offset). Keeps the better value at the higher quality mark; never
+        downgrades an existing entry."""
+        prob = as_problem(graph)
         form = form or canonical_form(graph)
-        canon = np.empty(graph.n, dtype=np.int8)
+        canon = np.empty(prob.n, dtype=np.int8)
         canon[form.perm] = np.asarray(assignment, dtype=np.int8)
         prev = self._entries.get(form.key)
         if prev is not None and prev.cut >= cut and prev.quality >= quality:

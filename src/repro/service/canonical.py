@@ -42,7 +42,7 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, Problem, as_problem
 
 
 _MAX_INDIVIDUALIZE = 64
@@ -133,22 +133,50 @@ def _refine(n: int, adj: list, colors: np.ndarray) -> np.ndarray:
         n_colors = len(ranked)
 
 
-def canonical_form(graph: Graph) -> CanonicalForm:
-    """Compute the canonical relabeling + cache key of a graph."""
+def canonical_form(graph: Graph | Problem) -> CanonicalForm:
+    """Compute the canonical relabeling + cache key of a graph or problem.
+
+    A `Problem`'s linear terms and offset fold into the key: initial WL
+    colors come from the ranks of the (quantized) per-vertex linear
+    coefficients — relabeling-invariant, since ranks depend only on
+    values — and the certificate appends the relabeled linear vector and
+    the offset. Two QUBOs sharing a quadratic but differing in linear
+    terms therefore cannot collide. Both additions are gated on the terms
+    being nonzero, so a plain `Graph` (and the zero-linear `Problem`)
+    hashes to the byte-identical pre-QUBO key.
+    """
+    lin = None
+    offset = 0.0
+    if isinstance(graph, Problem):
+        prob = graph
+        graph = prob.graph
+        lin_arr = np.asarray(prob.linear, dtype=np.float64)
+        offset = float(prob.offset)
+        if np.any(lin_arr != 0.0):
+            lin = lin_arr
     n = graph.n
     uv, w = normalized_edges(graph)
+
+    colors0 = np.zeros(n, dtype=np.int64)
+    if lin is not None:
+        # rank-of-value initial coloring: vertices with distinct linear
+        # coefficients can never be confused, and the refinement keeps
+        # its relabeling invariance (ranks are label-free)
+        _, colors0 = np.unique(np.round(lin * 1e6).astype(np.int64),
+                               return_inverse=True)
+        colors0 = colors0.astype(np.int64)
 
     if n > _EXACT_THRESHOLD:
         # large graphs: vectorized hashed refinement, no individualization
         # (admission latency over key strength; misses stay correct)
-        colors = _refine_hashed(n, uv, w, np.zeros(n, dtype=np.int64))
+        colors = _refine_hashed(n, uv, w, colors0)
     else:
         adj: list = [[] for _ in range(n)]
         for (u, v), wt in zip(uv, w.round(9)):
             adj[u].append((v, float(wt)))
             adj[v].append((u, float(wt)))
 
-        colors = _refine(n, adj, np.zeros(n, dtype=np.int64))
+        colors = _refine(n, adj, colors0)
         # individualization: split remaining ties one vertex at a time.
         # Pick the lowest-index vertex of the smallest-rank non-singleton
         # class — deterministic, and certificate-invariant whenever the
@@ -182,10 +210,18 @@ def canonical_form(graph: Graph) -> CanonicalForm:
     cert.update(lo[order].astype(np.int64).tobytes())
     cert.update(hi[order].astype(np.int64).tobytes())
     cert.update(w[order].round(6).astype(np.float64).tobytes())
+    if lin is not None:
+        # linear terms in *canonical* vertex order + the constant offset;
+        # appended only when nonzero so the zero path stays byte-identical
+        lin_canon = np.empty(n, dtype=np.float64)
+        lin_canon[perm] = lin
+        cert.update(b"lin")
+        cert.update(lin_canon.round(6).tobytes())
+        cert.update(np.float64(offset).tobytes())
     return CanonicalForm(
         key=cert.hexdigest(), perm=perm, n=n, n_edges=int(uv.shape[0])
     )
 
 
-def canonical_key(graph: Graph) -> str:
+def canonical_key(graph: Graph | Problem) -> str:
     return canonical_form(graph).key

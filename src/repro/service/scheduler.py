@@ -76,8 +76,8 @@ import numpy as np
 from repro.core import merge as merge_mod
 from repro.core import paraqaoa as para_mod
 from repro.core import qaoa as qaoa_mod
-from repro.core.graph import Graph, cut_value
-from repro.core.partition import partition_for_solver
+from repro.core.graph import Graph, Problem, as_problem, problem_value
+from repro.core.partition import partition_for_solver, split_linear
 from repro.obs import trace as trace_mod
 from repro.obs.metrics import Histogram, MetricsRegistry
 from repro.obs.trace import Span, Tracer
@@ -139,10 +139,13 @@ class RequestResult:
 
 
 class _Request:
-    def __init__(self, rid, graph, sla, plan, cfg, stream, on_update, form,
+    def __init__(self, rid, prob, sla, plan, cfg, stream, on_update, form,
                  tenant, submit_t, deadline_t=None):
         self.id = rid
-        self.graph = graph
+        self.prob = prob  # the full Problem (graph + linear + offset)
+        self.graph = prob.graph
+        self.has_lin = prob.has_linear
+        self.sub_lins = None  # per-subgraph linear terms, when has_lin
         self.sla = sla
         self.plan = plan
         self.cfg = cfg  # ParaQAOAConfig derived from plan.knobs
@@ -365,9 +368,11 @@ class SolveService:
         # admission queue: submitted-but-not-admitted requests, drained by
         # `submit` (eager default) or at the top of every `pump` tick
         self._admission: deque = deque()
-        # bucket key: the (frozen, hashable) QAOAConfig — one compiled
-        # program and one queue per static solver configuration
-        self._buckets: "OrderedDict[qaoa_mod.QAOAConfig, deque]" = OrderedDict()
+        # bucket key: (frozen QAOAConfig, has-linear-terms) — one compiled
+        # program and one queue per static solver configuration; linear
+        # (QUBO/MIS) batches carry a 4th input array so they can never
+        # share a compiled shape with pure Max-Cut batches
+        self._buckets: "OrderedDict[tuple, deque]" = OrderedDict()
         # dispatched batches whose device results have not landed yet
         self._inflight: "deque[_Batch]" = deque()
         self._last_harvest_t = 0.0  # de-queues solve-time observations
@@ -380,7 +385,7 @@ class SolveService:
     # ------------------------------------------------------------- admit --
     def submit(
         self,
-        graph: Graph,
+        graph: Graph | Problem,
         sla: SLA = SLA(),
         stream: bool = False,
         on_update: Optional[Callable] = None,
@@ -388,6 +393,12 @@ class SolveService:
         defer: bool = False,
     ) -> int:
         """Place one solve request on the admission queue; returns its id.
+
+        ``graph`` may be a plain `Graph` (Max-Cut) or a `core.graph.Problem`
+        (weighted Max-Cut / QUBO / MIS): linear terms ride through the
+        shape buckets (keyed on (config, has-linear) so mixed traffic never
+        recompiles), the backend dispatch, and the merge; the result's
+        ``cut_value`` is the full objective including the constant offset.
 
         With ``defer=False`` (default) admission happens before `submit`
         returns: cache hits complete immediately (the result is visible
@@ -427,6 +438,8 @@ class SolveService:
             rid, graph, sla, stream, on_update, tenant, t0 = (
                 self._admission.popleft()
             )
+            prob = as_problem(graph)
+            graph = prob.graph
             self.stats.admitted += 1
             # §6.6: plan against the budget *remaining now* — a deferred
             # request that waited on the admission queue plans (and is
@@ -448,16 +461,16 @@ class SolveService:
                 form = None
                 hit = None
                 if self.config.enable_cache:
-                    form = canonical_form(graph)
+                    form = canonical_form(prob)
                     with self.trace.span("cache_lookup"):
                         hit = self.cache.lookup(
-                            graph, form=form, min_quality=plan.quality
+                            prob, form=form, min_quality=plan.quality
                         )
             self.trace.end(adm, cache_hit=hit is not None)
             if hit is not None:
                 assignment, cut = hit
                 self._record_cached(
-                    rid, graph, plan, assignment, cut, t0,
+                    rid, prob, plan, assignment, cut, t0,
                     stream=stream, on_update=on_update, tenant=tenant,
                     deadline_t=None if sla.deadline_s is None
                     else t0 + sla.deadline_s,
@@ -476,11 +489,11 @@ class SolveService:
                 primary = self._inflight_forms.get(form.key)
                 if primary is not None and primary[1] >= plan.quality and not stream:
                     self._followers.setdefault(form.key, []).append(
-                        (rid, graph, sla, plan, form, t0, tenant)
+                        (rid, prob, sla, plan, form, t0, tenant)
                     )
                     continue
 
-            self._admit(rid, graph, sla, plan, form, stream, on_update,
+            self._admit(rid, prob, sla, plan, form, stream, on_update,
                         tenant, t0)
 
     def _shed_if_floor_late(self, rid, graph, sla, plan, budget, t0,
@@ -490,6 +503,7 @@ class SolveService:
         residual budget."""
         if (not self.config.enforce_deadlines) or budget is None:
             return False
+        graph = as_problem(graph).graph
         floor = self.planner.floor_predicted(
             graph.n, graph.n_edges, sla.floor_quality
         )
@@ -503,18 +517,22 @@ class SolveService:
     def _admit(self, rid, graph, sla, plan, form, stream, on_update,
                tenant="default", t0=None) -> None:
         """Enqueue a request's subgraphs into its shape bucket."""
+        prob = as_problem(graph)
         kn = plan.knobs
         cfg = plan.to_config()
         if t0 is None:
             t0 = self._clock()
         deadline_t = None if sla.deadline_s is None else t0 + sla.deadline_s
-        req = _Request(rid, graph, sla, plan, cfg, stream, on_update, form,
+        req = _Request(rid, prob, sla, plan, cfg, stream, on_update, form,
                        tenant, t0, deadline_t)
+        graph = req.graph
         ps = self.trace.begin(
             "partition", parent=self._req_spans.get(rid),
             n=graph.n, n_edges=graph.n_edges, n_qubits=kn.n_qubits,
         )
         req.part = partition_for_solver(graph, kn.n_qubits)
+        if req.has_lin:
+            req.sub_lins = split_linear(req.part, prob.linear)
         self.trace.end(ps, m=req.part.m)
         self._observe(ps)
         req.bit_indices = np.zeros((req.part.m, kn.top_k), dtype=np.int64)
@@ -524,8 +542,8 @@ class SolveService:
         if form is not None and form.key not in self._inflight_forms:
             self._inflight_forms[form.key] = (rid, plan.quality)
 
-        qcfg = cfg.qaoa_config()
-        queue = self._buckets.setdefault(qcfg, deque())
+        queue = self._buckets.setdefault((cfg.qaoa_config(), req.has_lin),
+                                         deque())
         for idx in range(req.part.m):
             queue.append(_Item(req, idx, self.stats.dispatches))
 
@@ -638,13 +656,13 @@ class SolveService:
         head item has waited ``max_wait_dispatches`` dispatches, in which
         case the queue with the oldest head pre-empts (the bounded-delay
         guarantee of DESIGN.md §6.5)."""
-        live = [(qcfg, q) for qcfg, q in self._buckets.items() if q]
+        live = [(key, q) for key, q in self._buckets.items() if q]
         if not live:
             return None
         fullest = max(live, key=lambda b: len(b[1]))
         bound = self.config.max_wait_dispatches
         overdue = [
-            (qcfg, q) for qcfg, q in live
+            (key, q) for key, q in live
             if self.stats.dispatches - q[0].enq_dispatch >= bound
         ]
         if overdue:
@@ -707,7 +725,7 @@ class SolveService:
         bucket = self._pick_bucket()
         if bucket is None:
             return False
-        qcfg, queue = bucket
+        (qcfg, has_lin), queue = bucket
         slots = self.config.batch_slots
         items = self._take_items(queue)
 
@@ -717,6 +735,13 @@ class SolveService:
             e_pad=edge_capacity(qcfg.n_qubits),
             n_rows=slots,
         )
+        linears = None
+        if has_lin:
+            linears = qaoa_mod.pad_linear_arrays(
+                [it.req.sub_lins[it.idx] for it in items],
+                qcfg.n_qubits,
+                n_rows=slots,
+            )
         # §8: one dispatch span per issued batch, open until its harvest
         # (requests it carries are listed in attrs — batches cross
         # request and tenant boundaries, so the span cannot nest under
@@ -726,7 +751,8 @@ class SolveService:
             n_qubits=qcfg.n_qubits, slots=slots, filled=len(items),
             rids=sorted({it.req.id for it in items}),
         )
-        res = self.backend.solve_batch(qcfg, edges, weights, masks)
+        res = self.backend.solve_batch(qcfg, edges, weights, masks,
+                                       linears=linears)
         self._inflight.append(_Batch(qcfg, items, res, self._clock(), ds))
         for it in items:
             it.req.started = True  # §6.6: committed — no more re-plans
@@ -830,8 +856,8 @@ class SolveService:
         from the old shape bucket, re-partition at the new qubit budget,
         and enqueue into the new bucket. Only legal before any of its
         subgraphs dispatched (`req.started` guards)."""
-        old_qcfg = req.cfg.qaoa_config()
-        queue = self._buckets.get(old_qcfg)
+        old_key = (req.cfg.qaoa_config(), req.has_lin)
+        queue = self._buckets.get(old_key)
         if queue is not None:
             keep = [it for it in queue if it.req is not req]
             queue.clear()
@@ -839,6 +865,10 @@ class SolveService:
         req.plan = plan
         req.cfg = plan.to_config()
         req.part = partition_for_solver(req.graph, plan.knobs.n_qubits)
+        if req.has_lin:
+            # re-partitioning moves range boundaries: the per-subgraph
+            # linear split must follow the new first-coverage assignment
+            req.sub_lins = split_linear(req.part, req.prob.linear)
         req.bit_indices = np.zeros(
             (req.part.m, plan.knobs.top_k), dtype=np.int64
         )
@@ -859,7 +889,9 @@ class SolveService:
             primary = self._inflight_forms.get(req.form.key)
             if primary is not None and primary[0] == req.id:
                 self._inflight_forms[req.form.key] = (req.id, plan.quality)
-        new_queue = self._buckets.setdefault(req.cfg.qaoa_config(), deque())
+        new_queue = self._buckets.setdefault(
+            (req.cfg.qaoa_config(), req.has_lin), deque()
+        )
         for idx in range(req.part.m):
             new_queue.append(_Item(req, idx, self.stats.dispatches))
 
@@ -867,7 +899,7 @@ class SolveService:
         """Drop one queued request whose deadline passed before dispatch
         (terminal ``"expired"``), and release its coalesced followers
         back through admission-style re-scoring."""
-        queue = self._buckets.get(req.cfg.qaoa_config())
+        queue = self._buckets.get((req.cfg.qaoa_config(), req.has_lin))
         if queue is not None:
             keep = [it for it in queue if it.req is not req]
             queue.clear()
@@ -947,15 +979,19 @@ class SolveService:
             "merge", parent=self._req_spans.get(req.id),
             knobs=req.plan.knobs, m=req.part.m, n_edges=req.graph.n_edges,
         )
+        lin = req.prob.linear if req.has_lin else None
         with trace_mod.use_tracer(self.trace), self.trace.attach(ms):
             if req.stream and req.part.m >= self.config.anytime_min_levels:
                 plan, bw = para_mod.merge_inputs(
-                    req.part, req.bit_indices, req.cfg
+                    req.part, req.bit_indices, req.cfg, linear=lin
                 )
                 best_cut, best_assign = -np.inf, None
                 for snap in merge_mod.merge_stream(plan, bw):
-                    if snap.cut_value > best_cut:
-                        best_cut, best_assign = snap.cut_value, snap.assignment
+                    # the stream scores the internal objective; surface
+                    # the full one (offset is exactly 0.0 for Max-Cut)
+                    val = snap.cut_value + req.prob.offset
+                    if val > best_cut:
+                        best_cut, best_assign = val, snap.assignment
                     anytime.append((snap.level, snap.n_levels, best_cut))
                     if req.on_update is not None:
                         req.on_update(req.id, snap.level, snap.n_levels,
@@ -963,10 +999,12 @@ class SolveService:
                 assignment = best_assign
             else:
                 assignment, _, _ = para_mod.merge_candidates(
-                    req.part, req.bit_indices, req.cfg
+                    req.part, req.bit_indices, req.cfg, linear=lin
                 )
             # final re-score from scratch, exactly as core.solve reconciles
-            cut = float(cut_value(req.graph, jnp.asarray(assignment)))
+            # — the *full* objective, so a QUBO/MIS result and its cached
+            # replay can never disagree on the linear part
+            cut = float(problem_value(req.prob, jnp.asarray(assignment)))
         self.trace.end(ms)
         self._observe(ms)
         if req.stream and not anytime:
@@ -979,7 +1017,7 @@ class SolveService:
         now = self._clock()
         if self.config.enable_cache:
             self.cache.store(
-                req.graph,
+                req.prob,
                 assignment,
                 cut,
                 quality=req.plan.quality,

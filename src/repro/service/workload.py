@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, Problem
 from repro.service.planner import SLA
 
 
@@ -35,15 +35,39 @@ def relabel(graph: Graph, perm: np.ndarray) -> Graph:
     return Graph.from_edges(graph.n, perm[e], w)
 
 
+def relabel_problem(prob: Problem, perm: np.ndarray) -> Problem:
+    """The same `Problem` under a vertex permutation: the quadratic edges
+    and the per-vertex linear terms move together (vertex v → perm[v])."""
+    lin = np.zeros(prob.n, dtype=np.float32)
+    lin[perm] = np.asarray(prob.linear, dtype=np.float32)
+    return dataclasses.replace(
+        prob, graph=relabel(prob.graph, perm), linear=np.asarray(lin)
+    )
+
+
+def _generate(n: int, p: float, seed: int, weights: str) -> Graph:
+    """One seed-stable instance; ``weights``: "unit" | "uniform" | "spin"."""
+    if weights == "uniform":
+        return Graph.erdos_renyi_weighted(n, p, seed=seed)
+    if weights == "spin":
+        return Graph.spin_glass(n, p, seed=seed)
+    if weights != "unit":
+        raise ValueError(f"unknown weight family: {weights!r}")
+    return Graph.erdos_renyi(n, p, seed=seed)
+
+
 def request_mix(
     load: int,
     n_range: tuple,
     p: float,
     repeat_frac: float,
     seed: int,
+    weights: str = "unit",
 ) -> list:
     """Seed-stable graphs for one offered load; ~repeat_frac of them are
-    vertex-relabeled copies of earlier ones (isomorphic, cache-hittable)."""
+    vertex-relabeled copies of earlier ones (isomorphic, cache-hittable).
+    ``weights`` selects the instance family: unit-weight ER (default),
+    uniform-weight ER, or ±1 spin glass."""
     rng = np.random.default_rng(seed)
     fresh, graphs = [], []
     for _ in range(load):
@@ -53,10 +77,52 @@ def request_mix(
             graphs.append(relabel(g0, perm))
         else:
             n = int(rng.integers(n_range[0], n_range[1] + 1))
-            g = Graph.erdos_renyi(n, p, seed=int(rng.integers(1 << 30)))
+            g = _generate(n, p, int(rng.integers(1 << 30)), weights)
             fresh.append(g)
             graphs.append(g)
     return graphs
+
+
+def problem_mix(
+    load: int,
+    n_range: tuple,
+    p: float,
+    repeat_frac: float,
+    seed: int,
+    problem: str = "maxcut",
+    weights: str = "unit",
+) -> list:
+    """Seed-stable `Problem` requests for one offered load.
+
+    ``problem``: "maxcut" returns plain graphs (exactly `request_mix`);
+    "mis" wraps each topology in the penalty-QUBO MIS encoding; "qubo"
+    draws a random QUBO (graph quadratic + N(0,1) linear terms). Repeats
+    are vertex-relabeled copies — for problems, the linear terms permute
+    with the vertices, so the canonical cache should still hit."""
+    if problem == "maxcut":
+        return request_mix(load, n_range, p, repeat_frac, seed, weights)
+    rng = np.random.default_rng(seed)
+    fresh, probs = [], []
+    for _ in range(load):
+        if fresh and rng.random() < repeat_frac:
+            p0 = fresh[int(rng.integers(len(fresh)))]
+            perm = rng.permutation(p0.n).astype(np.int32)
+            probs.append(relabel_problem(p0, perm))
+        else:
+            n = int(rng.integers(n_range[0], n_range[1] + 1))
+            g = _generate(n, p, int(rng.integers(1 << 30)), weights)
+            if problem == "mis":
+                pr = Problem.mis(g)
+            elif problem == "qubo":
+                e = np.asarray(g.edges)[: g.n_edges]
+                q = np.asarray(g.weights)[: g.n_edges]
+                lin = rng.normal(size=n).astype(np.float32)
+                pr = Problem.qubo(n, e, q, linear=lin)
+            else:
+                raise ValueError(f"unknown problem family: {problem!r}")
+            fresh.append(pr)
+            probs.append(pr)
+    return probs
 
 
 def tenant_mix(load: int, tenants: int, seed: int) -> list:

@@ -69,6 +69,16 @@ def test_merge_sharded_matches_exact():
     assert res["assignment_achieves_val"], res
 
 
+def test_problem_families_distributed_parity():
+    """QUBO and penalty-MIS `Problem`s through `solve_distributed` on an
+    emulated data mesh: exact cut/assignment parity with single-device
+    `solve` on the same problem, and the MIS result is a valid
+    independent set (DESIGN.md §9)."""
+    res = _run_check("problem_distributed")
+    for key, ok in res.items():
+        assert ok, f"{key}: {res}"
+
+
 def test_service_mesh_backend_parity():
     """The solve service over `MeshBackend` (solve_pool on an emulated
     4-device `data` mesh) returns bit-identical cuts/assignments to the
